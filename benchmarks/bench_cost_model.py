@@ -1,0 +1,71 @@
+"""Cost-model validation (§3): for each physical method, compare the
+paper's modeled phase workloads (Eqs. 1, 5) against the engine's *measured*
+exchange bytes, and verify the Eq. 13 crossover on a controlled size sweep.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import (CostParams, JoinMethod,
+                                   broadcast_workload, k0_threshold,
+                                   shuffle_workload)
+from repro.joins import from_numpy, partition_round_robin, run_equi_join
+
+from .common import emit
+
+
+def _tables(na, nb, p, seed=0):
+    rng = np.random.default_rng(seed)
+    b = from_numpy({"k": np.arange(nb, dtype=np.int32),
+                    "pay": rng.integers(0, 99, nb).astype(np.int32)})
+    a = from_numpy({"k": rng.integers(0, nb, na).astype(np.int32),
+                    "v": rng.uniform(size=na).astype(np.float32)})
+    return (partition_round_robin(a, p), partition_round_robin(b, p),
+            a, b)
+
+
+def run(p: int = 8):
+    params = CostParams(p=p, w=1.0)
+    A, B, a, b = _tables(20_000, 1_000, p)
+
+    # Eq. 1: broadcast network workload == (p-1)|B| exactly.
+    _, rep = run_equi_join(JoinMethod.BROADCAST_HASH, A, B, "k", "k")
+    model = broadcast_workload(b.count() * b.row_bytes, params)
+    meas = rep.exchanges[0].network_bytes
+    emit("cost_model/broadcast_eq1", 0.0,
+         f"model={model:.0f};measured={meas:.0f};"
+         f"rel_err={abs(model - meas) / model:.4f}")
+
+    # Eq. 5: shuffle network workload ~ ((p-1)/p)(|A|+|B|).
+    _, rep = run_equi_join(JoinMethod.SHUFFLE_HASH, A, B, "k", "k")
+    model = shuffle_workload(a.count() * a.row_bytes,
+                             b.count() * b.row_bytes, params)
+    meas = sum(e.network_bytes for e in rep.exchanges)
+    emit("cost_model/shuffle_eq5", 0.0,
+         f"model={model:.0f};measured={meas:.0f};"
+         f"rel_err={abs(model - meas) / model:.4f}")
+
+    # Eq. 13 crossover: sweep k and confirm the cheaper *measured total
+    # workload* flips sides at k0.
+    k0 = k0_threshold(params)
+    flips = []
+    for k in (2, 8, int(k0), int(2 * k0), int(8 * k0)):
+        na = 1_000 * k
+        A, B, a, b = _tables(na, 1_000, p, seed=k)
+        _, rb = run_equi_join(JoinMethod.BROADCAST_HASH, A, B, "k", "k")
+        _, rs = run_equi_join(JoinMethod.SHUFFLE_HASH, A, B, "k", "k")
+
+        def total(rep):
+            return (sum(e.network_bytes for e in rep.exchanges)
+                    + rep.local_bytes)
+        winner = ("broadcast" if total(rb) < total(rs) else "shuffle")
+        flips.append((k, winner))
+        emit(f"cost_model/crossover_k={k}", 0.0,
+             f"k0={k0:.0f};winner={winner};"
+             f"bcast={total(rb):.0f};shuf={total(rs):.0f}")
+    return flips
+
+
+if __name__ == "__main__":
+    run()

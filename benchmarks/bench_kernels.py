@@ -1,0 +1,70 @@
+"""Kernel + join-method microbenchmarks (us_per_call; interpret-mode Pallas
+timings are NOT TPU-representative and are labeled as such — the TPU story
+lives in §Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import JoinMethod
+from repro.joins import from_numpy, partition_round_robin, run_equi_join
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready() if hasattr(
+        x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 4096, 4096).astype(np.int32))
+    b = jnp.asarray(rng.permutation(4096).astype(np.int32)[:1024])
+    emit("kernels/tiled_probe_ref_4096x1024",
+         _time(lambda: ref.tiled_probe_ref(a, b).block_until_ready()),
+         "jnp_oracle")
+    emit("kernels/tiled_probe_interp_4096x1024",
+         _time(lambda: ops.probe(a, b).block_until_ready()),
+         "pallas_interpret_NOT_tpu_time")
+
+    d = jnp.asarray(rng.integers(0, 64, 65536).astype(np.int32))
+    emit("kernels/partition_hist_ref_64k",
+         _time(lambda: ref.partition_hist_ref(d, 64).block_until_ready()),
+         "jnp_oracle")
+    emit("kernels/partition_hist_interp_64k",
+         _time(lambda: ops.hist(d, 64).block_until_ready()),
+         "pallas_interpret_NOT_tpu_time")
+
+    k = jnp.asarray(rng.integers(0, 1 << 20, 2048).astype(np.int32))
+    v = jnp.arange(2048, dtype=jnp.int32)
+    emit("kernels/bitonic_sort_2048",
+         _time(lambda: ops.sort_pairs(k, v)[0].block_until_ready()),
+         "pallas_interpret_NOT_tpu_time")
+
+    # join methods end-to-end (eager engine)
+    bn = from_numpy({"k": np.arange(2000, dtype=np.int32),
+                     "pay": np.ones(2000, np.int32)})
+    an = from_numpy({"k": rng.integers(0, 2000, 50_000).astype(np.int32),
+                     "v": np.ones(50_000, np.float32)})
+    A, B = partition_round_robin(an, 8), partition_round_robin(bn, 8)
+    for m in (JoinMethod.BROADCAST_HASH, JoinMethod.SHUFFLE_HASH,
+              JoinMethod.SHUFFLE_SORT):
+        emit(f"joins/{m.value}_50k_x_2k",
+             _time(lambda m=m: run_equi_join(m, A, B, "k", "k")[0]
+                   .valid.block_until_ready(), reps=2),
+             "eager_engine_cpu")
+
+
+if __name__ == "__main__":
+    run()

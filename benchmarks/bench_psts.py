@@ -1,0 +1,54 @@
+"""Table 5 reproduction: selection-difference statistics and the PSTS
+metric (%TimeDiff / %JoinDiff with AQE as the baseline).
+
+Paper: RelJoin PSTS = 1.98, ShuffleSort/ShuffleHash ~ -0.03/-0.04. We
+compute PSTS on both wall time and on measured workload (the deterministic
+variant, immune to 1-core CI noise)."""
+
+from __future__ import annotations
+
+from repro.core import JoinMethod, compute_psts
+from repro.sql import default_strategies, generate
+
+from .common import emit, run_suite
+
+
+def run(scale: float = 0.3, p: int = 8, runs: int = 2):
+    catalog = generate(scale=scale, p=p, seed=0)
+    strategies = default_strategies()
+    suites = {s.name: run_suite(catalog, s, runs=runs) for s in strategies}
+    qnames = list(next(iter(suites.values())))
+    base = suites["AQE"]
+
+    reports = {}
+    for name, suite in suites.items():
+        if name == "AQE":
+            continue
+        s_methods, b_methods = [], []
+        s_costs, b_costs = [], []
+        for q in qnames:
+            s_methods += suite[q]["methods"]
+            b_methods += base[q]["methods"]
+            s_costs += [d.selection.cost or 0.0
+                        for d in suite[q]["decisions"]]
+            b_costs += [d.selection.cost or 0.0
+                        for d in base[q]["decisions"]]
+        t_s = sum(suite[q]["wall_s"] for q in qnames)
+        t_b = sum(base[q]["wall_s"] for q in qnames)
+        w_s = sum(suite[q]["workload"] for q in qnames)
+        w_b = sum(base[q]["workload"] for q in qnames)
+        rep_t = compute_psts(s_methods, b_methods, t_s, t_b)
+        rep_w = compute_psts(s_methods, b_methods, w_s, w_b)
+        reports[name] = (rep_t, rep_w)
+        emit(f"psts/{name}", 0.0,
+             f"joindiff={rep_t.n_join_diff}/{rep_t.n_joins};"
+             f"pct_join={rep_t.pct_join_diff:.1f}%;"
+             f"psts_wall={rep_t.psts:.2f};psts_workload={rep_w.psts:.2f}")
+    rel_t, rel_w = reports["RelJoin(w=1)"]
+    emit("psts/claim_reljoin_positive", 0.0,
+         f"psts_workload={rel_w.psts:.2f};expect>0")
+    return reports
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Roofline summary (deliverable g): reads the dry-run artifacts from
+experiments/dryrun/ and emits the per-(arch x shape) roofline table rows.
+Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(mesh: str = "single"):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json")))
+    if not files:
+        emit("roofline/no_dryrun_artifacts", 0.0,
+             "run repro.launch.dryrun --all first")
+        return []
+    rows = []
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        cell = f"{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skip":
+            emit(f"roofline/{cell}", 0.0, "SKIP:" + rec["reason"][:60])
+            continue
+        if rec["status"] != "ok":
+            emit(f"roofline/{cell}", 0.0,
+                 "ERROR:" + rec.get("error", "?")[:80])
+            continue
+        r = rec["roofline"]
+        step = r["step_time_s"]
+        frac = r["compute_s"] / step if step else 0.0
+        emit(f"roofline/{cell}", step * 1e6,
+             f"bound={r['bound']};compute_s={r['compute_s']:.4f};"
+             f"memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"roofline_frac={frac:.3f};"
+             f"model_flops_ratio={rec['model_flops_ratio']:.3f}")
+        rows.append((cell, r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

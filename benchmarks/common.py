@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: suite runner + CSV emission.
+
+Primary engine metric: *measured cluster workload* (exact bytes counted by
+the executor — the paper's own §3.1.1 cost metric). Wall-clock on the
+1-core CPU container is reported as a secondary signal (warm, best-of-k),
+mirroring the paper's 3-run averaging.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.sql import Executor, all_queries, generate
+from repro.sql.strategies import Strategy
+
+
+def run_suite(catalog, strategy: Strategy, runs: int = 2,
+              queries: Dict | None = None) -> Dict[str, dict]:
+    """Execute every query; returns per-query record."""
+    queries = queries or all_queries()
+    out = {}
+    for qname, plan in queries.items():
+        best_wall = float("inf")
+        res = None
+        for _ in range(runs):
+            ex = Executor(catalog, strategy)
+            r = ex.execute(plan)
+            best_wall = min(best_wall, r.wall_time_s)
+            res = r
+        out[qname] = {
+            "wall_s": best_wall,
+            "workload": res.workload(w=1.0),
+            "network_bytes": res.network_bytes,
+            "local_bytes": res.local_bytes,
+            "methods": res.methods(),
+            "decisions": res.decisions,
+            "rows": res.rows,
+        }
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def mean(xs: List[float]) -> float:
+    return sum(xs) / max(len(xs), 1)

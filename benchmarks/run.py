@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call is 0.0 for
+derived-metric rows). Engine benchmarks use the measured-cluster-workload
+metric as primary (the paper's own §3.1.1 cost metric); wall-clock on this
+1-core container is a secondary signal.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller scales / fewer repeats")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: strategies,accuracy,psts,"
+                         "w_sweep,cost_model,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_accuracy, bench_cost_model, bench_kernels,
+                   bench_psts, bench_roofline, bench_strategies,
+                   bench_w_sweep)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    def want(name):
+        return only is None or name in only
+
+    if want("cost_model"):
+        bench_cost_model.run()
+    if want("kernels"):
+        bench_kernels.run()
+    if want("strategies"):
+        bench_strategies.run(scales=(0.2,) if args.quick else (0.2, 0.5),
+                             runs=1 if args.quick else 2)
+    if want("accuracy"):
+        bench_accuracy.run(scale=0.2 if args.quick else 0.3,
+                           runs=1 if args.quick else 2)
+    if want("psts"):
+        bench_psts.run(scale=0.2 if args.quick else 0.3,
+                       runs=1 if args.quick else 2)
+    if want("w_sweep"):
+        bench_w_sweep.run(scale=0.2 if args.quick else 0.3,
+                          runs=1 if args.quick else 2)
+    if want("roofline"):
+        bench_roofline.run()
+
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""RelJoin cost model — faithful implementation of paper §3 (Eqs. 1-13, Table 2).
+
+Cluster-workload costs of distributed join methods. Workload units are bytes of
+data touched (sizes |A|, |B|); the single hyperparameter ``w`` weights the
+network workload of the exchange phase against the local compute workload
+(paper §3.2.4). All formulas are linear in |A|, |B| except the sort terms.
+
+Notation (paper Table 1):
+    size_a, size_b   : |A|, |B|  (bytes; |A| >= |B| by convention, A = probe side)
+    card_a, card_b   : a, b      (row counts)
+    p                : distributed join parallelism (number of shuffle partitions)
+    w                : relative weight of network cost vs computing cost
+    l_fan            : average matches in B per row of A (uniform default b/a)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict
+
+
+class JoinMethod(enum.Enum):
+    """Physical distributed join methods modeled by the paper."""
+
+    BROADCAST_HASH = "broadcast_hash"
+    SHUFFLE_HASH = "shuffle_hash"
+    SHUFFLE_SORT = "shuffle_sort"
+    BROADCAST_NL = "broadcast_nl"
+    CARTESIAN = "cartesian"
+
+
+#: Paper Table 2 — higher-rank methods are preferred when feasible.
+RANK: Dict[JoinMethod, int] = {
+    JoinMethod.BROADCAST_HASH: 3,
+    JoinMethod.SHUFFLE_HASH: 3,
+    JoinMethod.SHUFFLE_SORT: 2,
+    JoinMethod.BROADCAST_NL: 1,
+    JoinMethod.CARTESIAN: 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Environment parameters of the cost model.
+
+    ``w`` is the paper's only hyperparameter (§1, §3.2.4); ``p`` is the join
+    parallelism. The paper's testbed uses w=1, p=20 (=> k0=39).
+    """
+
+    p: int = 20
+    w: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.p < 1:
+            raise ValueError(f"parallelism p must be >= 1, got {self.p}")
+        if self.w < 0:
+            raise ValueError(f"network weight w must be >= 0, got {self.w}")
+
+
+# ---------------------------------------------------------------------------
+# Phase workloads (Eqs. 1-12). Each returns cluster workload in |.| units.
+# ---------------------------------------------------------------------------
+
+def broadcast_workload(size_b: float, params: CostParams) -> float:
+    """Eq. 1: C_broadcast = (p-1)|B| — network workload of broadcasting B."""
+    return (params.p - 1) * size_b
+
+
+def build_workload_broadcast(size_b: float, params: CostParams) -> float:
+    """Eq. 2: C_build = p|B| — every task builds a hash map of all of B."""
+    return params.p * size_b
+
+
+def probe_workload(size_a: float, size_b: float, card_a: float, card_b: float,
+                   l_fan: float | None = None) -> float:
+    """Eq. 3 (general form in §3.2.3): C_probe = |A| + (a*l_fan/b)|B|.
+
+    With the paper's uniform-matching assumption l_fan = b/a this reduces to
+    |A| + |B| (Eq. 3). Passing an explicit fanout reproduces the general form.
+    """
+    if l_fan is None:
+        return size_a + size_b
+    if card_b <= 0:
+        return size_a
+    return size_a + (card_a * l_fan / card_b) * size_b
+
+
+def shuffle_workload(size_a: float, size_b: float, params: CostParams) -> float:
+    """Eq. 5: C_shuffle = ((p-1)/p)(|A| + |B|) — network workload of shuffle."""
+    p = params.p
+    return (p - 1) / p * (size_a + size_b)
+
+
+def sort_workload(size_a: float, size_b: float, card_a: float, card_b: float,
+                  params: CostParams) -> float:
+    """Eq. 6: C_sort = |A| log2(a/p) + |B| log2(b/p)."""
+    p = params.p
+    wa = size_a * math.log2(max(card_a / p, 1.0))
+    wb = size_b * math.log2(max(card_b / p, 1.0))
+    return wa + wb
+
+
+def merge_workload(size_a: float, size_b: float) -> float:
+    """Eq. 7: C_merge = |A| + |B|."""
+    return size_a + size_b
+
+
+def build_workload_shuffle(size_b: float) -> float:
+    """Eq. 9: C'_build = |B| — each task hashes only its partition of B."""
+    return size_b
+
+
+def nl_workload_broadcast(size_a: float, size_b: float, card_a: float) -> float:
+    """Eq. 11: C_NL = |A| + a|B|."""
+    return size_a + card_a * size_b
+
+
+def nl_workload_cartesian(size_a: float, size_b: float, card_a: float,
+                          params: CostParams) -> float:
+    """Eq. 12: C'_NL = |A| + (a/p)|B|."""
+    return size_a + card_a / params.p * size_b
+
+
+# ---------------------------------------------------------------------------
+# Overall method costs (Eqs. 4, 8, 10 and §3.5). w weights network terms.
+# ---------------------------------------------------------------------------
+
+def broadcast_hash_cost(size_a: float, size_b: float, params: CostParams) -> float:
+    """Eq. 4: C_broadcastHash = |A| + (wp - w + p + 1)|B|."""
+    p, w = params.p, params.w
+    return size_a + (w * p - w + p + 1) * size_b
+
+
+def shuffle_hash_cost(size_a: float, size_b: float, params: CostParams) -> float:
+    """Eq. 10: C_shuffleHash = ((wp-w+p)/p)|A| + ((wp-w+2p)/p)|B|."""
+    p, w = params.p, params.w
+    return (w * p - w + p) / p * size_a + (w * p - w + 2 * p) / p * size_b
+
+
+def shuffle_sort_cost(size_a: float, size_b: float, card_a: float, card_b: float,
+                      params: CostParams) -> float:
+    """Eq. 8: ((wp-w+p)/p + log2(a/p))|A| + ((wp-w+p)/p + log2(b/p))|B|."""
+    p, w = params.p, params.w
+    base = (w * p - w + p) / p
+    ta = base + math.log2(max(card_a / p, 1.0))
+    tb = base + math.log2(max(card_b / p, 1.0))
+    return ta * size_a + tb * size_b
+
+
+def broadcast_nl_cost(size_a: float, size_b: float, card_a: float,
+                      params: CostParams) -> float:
+    """§3.5: C_broadcastNL = |A| + (wp - w + a)|B|."""
+    p, w = params.p, params.w
+    return size_a + (w * p - w + card_a) * size_b
+
+
+def cartesian_cost(size_a: float, size_b: float, card_a: float,
+                   params: CostParams) -> float:
+    """§3.5: C_cartesian = ((wp-w+p)/p)|A| + ((wp-w+a)/p)|B|."""
+    p, w = params.p, params.w
+    return (w * p - w + p) / p * size_a + (w * p - w + card_a) / p * size_b
+
+
+def method_cost(method: JoinMethod, size_a: float, size_b: float,
+                card_a: float, card_b: float, params: CostParams) -> float:
+    """Dispatch to the per-method overall cost."""
+    if method is JoinMethod.BROADCAST_HASH:
+        return broadcast_hash_cost(size_a, size_b, params)
+    if method is JoinMethod.SHUFFLE_HASH:
+        return shuffle_hash_cost(size_a, size_b, params)
+    if method is JoinMethod.SHUFFLE_SORT:
+        return shuffle_sort_cost(size_a, size_b, card_a, card_b, params)
+    if method is JoinMethod.BROADCAST_NL:
+        return broadcast_nl_cost(size_a, size_b, card_a, params)
+    if method is JoinMethod.CARTESIAN:
+        return cartesian_cost(size_a, size_b, card_a, params)
+    raise ValueError(f"unknown method {method}")
+
+
+def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
+              params: CostParams) -> Dict[JoinMethod, float]:
+    """Costs of every modeled method for one logical join."""
+    return {m: method_cost(m, size_a, size_b, card_a, card_b, params)
+            for m in JoinMethod}
+
+
+# ---------------------------------------------------------------------------
+# The relative-size criterion (Eq. 13).
+# ---------------------------------------------------------------------------
+
+def k0_threshold(params: CostParams) -> float:
+    """Eq. 13: k0 = (pw + p - w)/w — broadcast wins iff |A| > k0 |B|.
+
+    For w -> 0 the threshold diverges (broadcast's extra build work p|B| can
+    never be amortized by saving network), matching §5.5's observation that
+    small w makes RelJoin behave like the forced-shuffle strategies.
+    """
+    p, w = params.p, params.w
+    if w == 0:
+        return math.inf
+    return (p * w + p - w) / w
+
+
+def relative_size(size_a: float, size_b: float) -> float:
+    """k such that |A| = k|B| (inf when B is empty)."""
+    if size_b <= 0:
+        return math.inf
+    return size_a / size_b
+
+
+def broadcast_preferred(size_a: float, size_b: float, params: CostParams) -> bool:
+    """True iff C_broadcastHash < C_shuffleHash, i.e. k > k0 (paper §3.6.2)."""
+    return relative_size(size_a, size_b) > k0_threshold(params)

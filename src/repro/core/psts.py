@@ -1,0 +1,71 @@
+"""Performance Sensitivity To Selections (PSTS) — paper §5.4, Table 5.
+
+PSTS = %TimeDiff / %JoinDiff with a baseline strategy (AQE in the paper):
+
+    %JoinDiff = (# joins where the strategy and the baseline select different
+                 methods) / (total # joins) * 100
+    %TimeDiff = (baseline total time - strategy total time)
+                / baseline total time * 100
+
+PSTS > 0: the strategy's differing selections help; ~1 means 1% of selection
+changes buys 1% completion-time reduction. Near 0 / negative: ineffective or
+harmful (paper: ShuffleSort -0.03, ShuffleHash -0.04, RelJoin 1.98).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .cost_model import JoinMethod
+
+
+def _is_shuffle(m: JoinMethod) -> bool:
+    # Paper §5.4 treats shuffle sort and shuffle hash as the same method when
+    # counting selection differences (their performance is near-identical).
+    return m in (JoinMethod.SHUFFLE_SORT, JoinMethod.SHUFFLE_HASH,
+                 JoinMethod.CARTESIAN)
+
+
+def selections_differ(m1: JoinMethod, m2: JoinMethod) -> bool:
+    """Broadcast-vs-shuffle is the difference that matters (paper §5.4)."""
+    return _is_shuffle(m1) != _is_shuffle(m2)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSTSReport:
+    n_join_diff: int
+    n_joins: int
+    cost_diff: float
+    time_diff: float
+    pct_join_diff: float
+    pct_time_diff: float
+    psts: float
+
+    def cost_diff_per_join(self) -> float:
+        return self.cost_diff / self.n_join_diff if self.n_join_diff else 0.0
+
+    def time_diff_per_join(self) -> float:
+        return self.time_diff / self.n_join_diff if self.n_join_diff else 0.0
+
+
+def compute_psts(strategy_methods: Sequence[JoinMethod],
+                 baseline_methods: Sequence[JoinMethod],
+                 strategy_time: float, baseline_time: float,
+                 strategy_costs: Sequence[float] = (),
+                 baseline_costs: Sequence[float] = ()) -> PSTSReport:
+    """Compute the Table-5 statistics for one benchmark run."""
+    if len(strategy_methods) != len(baseline_methods):
+        raise ValueError("selection sequences must align join-for-join")
+    n = len(strategy_methods)
+    diffs = [i for i in range(n)
+             if selections_differ(strategy_methods[i], baseline_methods[i])]
+    cost_diff = 0.0
+    if strategy_costs and baseline_costs:
+        cost_diff = sum(baseline_costs[i] - strategy_costs[i] for i in diffs)
+    time_diff = baseline_time - strategy_time
+    pct_join = 100.0 * len(diffs) / n if n else 0.0
+    pct_time = 100.0 * time_diff / baseline_time if baseline_time else 0.0
+    psts = pct_time / pct_join if pct_join else 0.0
+    return PSTSReport(len(diffs), n, cost_diff, time_diff, pct_join, pct_time,
+                      psts)

@@ -1,0 +1,179 @@
+"""Distributed join method selection — paper Algorithm 1 (§4.3) plus the
+validity fallback of §4.4.
+
+Selection is per-logical-join and independent of other joins (paper §4.2), so
+repeated calls over a plan's joins yield the model-globally-optimal physical
+plan in O(l*h).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .cost_model import (CostParams, JoinMethod, broadcast_hash_cost,
+                         broadcast_nl_cost, cartesian_cost, shuffle_hash_cost,
+                         shuffle_sort_cost)
+from .stats import DEFAULT_WATERMARK_BYTES, TableStats
+
+
+class JoinType(enum.Enum):
+    INNER = "inner"
+    LEFT_OUTER = "left_outer"
+    RIGHT_OUTER = "right_outer"
+    FULL_OUTER = "full_outer"
+    LEFT_SEMI = "left_semi"
+    LEFT_ANTI = "left_anti"
+    CROSS = "cross"
+
+
+#: Join types for which the Cartesian product join is feasible ("inner-like").
+INNER_LIKE = frozenset({JoinType.INNER, JoinType.CROSS, JoinType.LEFT_SEMI,
+                        JoinType.LEFT_ANTI})
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinProperties:
+    """Feasibility flags of a logical join (Algorithm 1 inputs)."""
+
+    join_type: JoinType = JoinType.INNER
+    equi: bool = True                  # has equality predicates
+    sortable_keys: bool = True         # sort join feasible
+    hashable: bool = True              # memory allows building a hash map
+    hint: Optional[JoinMethod] = None  # user-defined join hint (§4.3 line 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Outcome of one selection with audit info."""
+
+    method: JoinMethod
+    reason: str
+    cost: float
+    costs: dict
+    used_fallback: bool = False
+    swapped_sides: bool = False  # True when |B| > |A| and sides were flipped
+
+
+def _ordered(left: TableStats, right: TableStats):
+    """Paper §3.1.4: A is the larger side. Returns (A, B, swapped)."""
+    if right.size_bytes > left.size_bytes:
+        return right, left, True
+    return left, right, False
+
+
+def select_join_method(left: TableStats, right: TableStats,
+                       props: JoinProperties, params: CostParams,
+                       watermark_bytes: float = DEFAULT_WATERMARK_BYTES,
+                       ) -> Selection:
+    """Algorithm 1: cost-based distributed join method selection.
+
+    ``left``/``right`` are the plan-order children; the model's A/B roles are
+    assigned by size (A = larger). Returns the selected physical method.
+    """
+    # Line 1-3: user hints short-circuit everything.
+    if props.hint is not None:
+        return Selection(props.hint, "user hint", float("nan"), {},
+                         swapped_sides=False)
+
+    a, b, swapped = _ordered(left, right)
+
+    # §4.4: invalid statistics (e.g. huge lazy-init sizes) -> fall back to the
+    # platform's original absolute-size strategy, handled by the caller.
+    if not (a.is_valid(watermark_bytes) and b.is_valid(watermark_bytes)):
+        sel = select_absolute_size(left, right, props)
+        return dataclasses.replace(sel, used_fallback=True,
+                                   reason="invalid stats: " + sel.reason)
+
+    sa, sb = a.size_bytes, b.size_bytes
+    ca, cb = max(a.cardinality, 1.0), max(b.cardinality, 1.0)
+
+    costs = {
+        JoinMethod.BROADCAST_HASH: broadcast_hash_cost(sa, sb, params),
+        JoinMethod.SHUFFLE_HASH: shuffle_hash_cost(sa, sb, params),
+        JoinMethod.SHUFFLE_SORT: shuffle_sort_cost(sa, sb, ca, cb, params),
+        JoinMethod.BROADCAST_NL: broadcast_nl_cost(sa, sb, ca, params),
+        JoinMethod.CARTESIAN: cartesian_cost(sa, sb, ca, params),
+    }
+
+    if props.equi:
+        # Lines 4-9: hash joins when hashing is allowed.
+        if props.hashable:
+            if costs[JoinMethod.BROADCAST_HASH] < costs[JoinMethod.SHUFFLE_HASH]:
+                m = JoinMethod.BROADCAST_HASH
+                why = "equi, hashable, C_bh < C_sh (k > k0)"
+            else:
+                m = JoinMethod.SHUFFLE_HASH
+                why = "equi, hashable, C_sh <= C_bh (k <= k0)"
+            return Selection(m, why, costs[m], costs, swapped_sides=swapped)
+        # Lines 10-11: sort join.
+        if props.sortable_keys:
+            m = JoinMethod.SHUFFLE_SORT
+            return Selection(m, "equi, not hashable, sortable keys",
+                             costs[m], costs, swapped_sides=swapped)
+
+    # Lines 12-17: NL-family fallbacks (non-equi, unsortable, unhashable).
+    if (costs[JoinMethod.CARTESIAN] <= costs[JoinMethod.BROADCAST_NL]
+            and props.join_type in INNER_LIKE):
+        m = JoinMethod.CARTESIAN
+        why = "NL family, inner-like, C_cartesian <= C_broadcastNL"
+    else:
+        m = JoinMethod.BROADCAST_NL
+        why = "NL family"
+    return Selection(m, why, costs[m], costs, swapped_sides=swapped)
+
+
+# ---------------------------------------------------------------------------
+# Baseline strategies reproduced for evaluation (paper Table 3).
+# ---------------------------------------------------------------------------
+
+#: Spark AQE's default autoBroadcastJoinThreshold.
+AQE_BROADCAST_THRESHOLD_BYTES: float = 10 * 1024 ** 2
+
+
+def select_absolute_size(left: TableStats, right: TableStats,
+                         props: JoinProperties,
+                         threshold_bytes: float = AQE_BROADCAST_THRESHOLD_BYTES,
+                         prefer_sort: bool = True) -> Selection:
+    """The AQE strategy: broadcast iff min-side size <= absolute threshold;
+    otherwise shuffle sort (Spark's default) or shuffle hash."""
+    a, b, swapped = _ordered(left, right)
+    if props.hint is not None:
+        return Selection(props.hint, "user hint", float("nan"), {})
+    if props.equi and props.hashable and b.size_bytes <= threshold_bytes:
+        return Selection(JoinMethod.BROADCAST_HASH,
+                         f"abs size {b.size_bytes:.0f} <= {threshold_bytes:.0f}",
+                         float("nan"), {}, swapped_sides=swapped)
+    if props.equi and props.sortable_keys and prefer_sort:
+        return Selection(JoinMethod.SHUFFLE_SORT, "abs size: default sort",
+                         float("nan"), {}, swapped_sides=swapped)
+    if props.equi and props.hashable:
+        return Selection(JoinMethod.SHUFFLE_HASH, "abs size: hash",
+                         float("nan"), {}, swapped_sides=swapped)
+    if props.join_type in INNER_LIKE:
+        return Selection(JoinMethod.CARTESIAN, "abs size: NL family",
+                         float("nan"), {}, swapped_sides=swapped)
+    return Selection(JoinMethod.BROADCAST_NL, "abs size: NL family",
+                     float("nan"), {}, swapped_sides=swapped)
+
+
+def select_forced(method: JoinMethod, left: TableStats, right: TableStats,
+                  props: JoinProperties) -> Selection:
+    """ShuffleSort / ShuffleHash forced strategies (paper Table 3): hint the
+    shuffle method when feasible, otherwise degrade like Algorithm 1 would."""
+    a, b, swapped = _ordered(left, right)
+    if method is JoinMethod.SHUFFLE_SORT and props.equi and props.sortable_keys:
+        return Selection(method, "forced", float("nan"), {},
+                         swapped_sides=swapped)
+    if method is JoinMethod.SHUFFLE_HASH and props.equi and props.hashable:
+        return Selection(method, "forced", float("nan"), {},
+                         swapped_sides=swapped)
+    if props.equi and props.sortable_keys:
+        return Selection(JoinMethod.SHUFFLE_SORT, "forced-fallback",
+                         float("nan"), {}, swapped_sides=swapped)
+    if props.join_type in INNER_LIKE:
+        return Selection(JoinMethod.CARTESIAN, "forced-fallback", float("nan"),
+                         {}, swapped_sides=swapped)
+    return Selection(JoinMethod.BROADCAST_NL, "forced-fallback", float("nan"),
+                     {}, swapped_sides=swapped)

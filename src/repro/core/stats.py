@@ -1,0 +1,112 @@
+"""Dataset statistics used by the RelJoin cost model (paper §2.3).
+
+The cost model needs exactly two statistics per dataset: *size* in bytes and
+*cardinality* in rows (paper §4.1 Step 1: "the required statistics are the
+size and cardinality of the output dataset"). Statistics are either
+
+  * ``ESTIMATED`` — statically analyzed along the logical plan, or
+  * ``RUNTIME``   — measured at a data-exchange boundary (adaptive runtime
+    statistics, §2.3/§4.1), which supersede estimates.
+
+A *watermark* (default 100 GB, §4.4) caps the size a statistic may take while
+still being considered valid; lazily-initialized "very large number" defaults
+from sources without stats are thereby rejected and the optimizer falls back
+to the platform's original absolute-size strategy for that join.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+#: Paper §4.4: default watermark = 100 GB.
+DEFAULT_WATERMARK_BYTES: float = 100 * 1024 ** 3
+
+#: Spark initializes unknown sizes to a huge default (Long.MaxValue-ish).
+UNKNOWN_SIZE: float = float(2 ** 63 - 1)
+
+
+class StatsSource(enum.Enum):
+    ESTIMATED = "estimated"
+    RUNTIME = "runtime"
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStats:
+    """(size, cardinality) of one dataset plus provenance."""
+
+    size_bytes: float
+    cardinality: float
+    source: StatsSource = StatsSource.ESTIMATED
+
+    @property
+    def row_bytes(self) -> float:
+        """|A|/a — average row size (paper Table 1)."""
+        if self.cardinality <= 0:
+            return 0.0
+        return self.size_bytes / self.cardinality
+
+    def is_valid(self, watermark_bytes: float = DEFAULT_WATERMARK_BYTES) -> bool:
+        """Paper §4.4: only sizes below the watermark are valid statistics."""
+        return (
+            math.isfinite(self.size_bytes)
+            and 0 <= self.size_bytes <= watermark_bytes
+            and math.isfinite(self.cardinality)
+            and self.cardinality >= 0
+        )
+
+    def as_runtime(self) -> "TableStats":
+        return dataclasses.replace(self, source=StatsSource.RUNTIME)
+
+    def scaled(self, selectivity: float) -> "TableStats":
+        """Estimate stats after a filter with the given selectivity.
+
+        Derived statistics are always ESTIMATED, even when the input was
+        runtime-measured: only exchange boundaries produce RUNTIME stats.
+        """
+        sel = min(max(selectivity, 0.0), 1.0)
+        return TableStats(self.size_bytes * sel, self.cardinality * sel,
+                          StatsSource.ESTIMATED)
+
+
+def unknown_stats() -> TableStats:
+    """Stats for a lazily-loaded source without header statistics (§4.4)."""
+    return TableStats(UNKNOWN_SIZE, UNKNOWN_SIZE, StatsSource.ESTIMATED)
+
+
+# ---------------------------------------------------------------------------
+# Static estimation rules for plan operators (standard CBO rules; §2.3).
+# ---------------------------------------------------------------------------
+
+def estimate_filter(inp: TableStats, selectivity: float) -> TableStats:
+    return inp.scaled(selectivity)
+
+
+def estimate_project(inp: TableStats, kept_byte_fraction: float) -> TableStats:
+    frac = min(max(kept_byte_fraction, 0.0), 1.0)
+    return TableStats(inp.size_bytes * frac, inp.cardinality,
+                      StatsSource.ESTIMATED)
+
+
+def estimate_join(left: TableStats, right: TableStats,
+                  fk_to_pk: bool = True,
+                  distinct_keys: float | None = None) -> TableStats:
+    """Output stats of an equi-join.
+
+    For FK->PK joins (the TPC-DS star-schema case) output cardinality is the
+    probe-side cardinality; otherwise the textbook a*b/max(distinct) rule.
+    Output row size is the sum of both row sizes (all columns kept).
+    """
+    if fk_to_pk:
+        card = left.cardinality
+    else:
+        d = distinct_keys or max(left.cardinality, right.cardinality, 1.0)
+        card = left.cardinality * right.cardinality / max(d, 1.0)
+    row = left.row_bytes + right.row_bytes
+    return TableStats(card * row, card, StatsSource.ESTIMATED)
+
+
+def estimate_group_by(inp: TableStats, groups: float) -> TableStats:
+    card = min(inp.cardinality, max(groups, 1.0))
+    return TableStats(card * inp.row_bytes, card, StatsSource.ESTIMATED)

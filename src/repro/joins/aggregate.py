@@ -1,0 +1,105 @@
+"""Group-by aggregation — the other exchange-bounded operation (paper §1:
+"every join or group-by-like operation" updates runtime statistics).
+
+Distributed plan: shuffle rows by group key (same exchange as the shuffle
+joins), then aggregate each co-partition locally: sort by key, mark segment
+heads, segment-sum. Static shapes throughout; output rows are the segment
+heads (cardinality = #groups, the runtime statistic of the stage).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .exchange import ExchangeReport, shuffle
+from .table import Table
+
+AGG_OPS = ("sum", "count", "min", "max", "mean")
+
+
+def _local_group_agg(key: jax.Array, valid: jax.Array,
+                     cols: Dict[str, jax.Array],
+                     aggs: Sequence[Tuple[str, str]]):
+    """Aggregate one partition by key. Returns (out_cols, out_valid)."""
+    n = key.shape[0]
+    big = jnp.iinfo(jnp.int32).max
+    k = jnp.where(valid, key, big).astype(jnp.int32)
+    order = jnp.argsort(k)
+    ks = k[order]
+    head = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1          # group id per row
+    out_valid = head & (ks != big)
+
+    out_cols = {"_group_key": jnp.where(out_valid, ks, 0)}
+    live = (ks != big)
+    for col, op in aggs:
+        v = cols[col][order]
+        if op == "count":
+            data = live.astype(jnp.int32)
+            seg_out = jax.ops.segment_sum(data, seg, num_segments=n)
+        elif op in ("sum", "mean"):
+            data = jnp.where(live, v, 0)
+            seg_out = jax.ops.segment_sum(data, seg, num_segments=n)
+            if op == "mean":
+                cnt = jax.ops.segment_sum(live.astype(v.dtype), seg,
+                                          num_segments=n)
+                seg_out = seg_out / jnp.maximum(cnt, 1)
+        elif op == "min":
+            data = jnp.where(live, v, jnp.asarray(jnp.inf, v.dtype)
+                             if jnp.issubdtype(v.dtype, jnp.floating)
+                             else jnp.iinfo(v.dtype).max)
+            seg_out = jax.ops.segment_min(data, seg, num_segments=n)
+        elif op == "max":
+            data = jnp.where(live, v, jnp.asarray(-jnp.inf, v.dtype)
+                             if jnp.issubdtype(v.dtype, jnp.floating)
+                             else jnp.iinfo(v.dtype).min)
+            seg_out = jax.ops.segment_max(data, seg, num_segments=n)
+        else:
+            raise ValueError(f"unknown agg op {op}")
+        # Each row reads its group's aggregate; only head rows stay valid.
+        out_cols[f"{op}_{col}"] = jnp.take(seg_out, seg)
+    # Head rows carry the group results; others are invalid.
+    return out_cols, out_valid
+
+
+def group_aggregate(table: Table, key: str,
+                    aggs: Sequence[Tuple[str, str]],
+                    capacity_factor: float = 2.0
+                    ) -> tuple[Table, ExchangeReport]:
+    """Distributed group-by: shuffle by key + local segment aggregation."""
+    if not table.stacked:
+        raise ValueError("group_aggregate expects a stacked table")
+    shuffled, report = shuffle(table, key, capacity_factor)
+    out_cols, out_valid = jax.vmap(
+        lambda k, v, c: _local_group_agg(k, v, c, tuple(aggs))
+    )(shuffled.column(key), shuffled.valid, shuffled.columns)
+    out_cols = dict(out_cols)
+    out_cols[key] = out_cols.pop("_group_key")
+    # Output is hash-partitioned by the group key: downstream shuffles on
+    # the same key are elided (§3.7 key-dependency).
+    return Table(out_cols, out_valid, partitioned_by=key), report
+
+
+def global_aggregate(table: Table, aggs: Sequence[Tuple[str, str]]
+                     ) -> Dict[str, float]:
+    """Whole-table scalar aggregates (query result tails)."""
+    out = {}
+    v = table.valid
+    for col, op in aggs:
+        c = table.column(col)
+        if op == "count":
+            out[f"count_{col}"] = float(jnp.sum(v))
+        elif op == "sum":
+            out[f"sum_{col}"] = float(jnp.sum(jnp.where(v, c, 0)))
+        elif op == "mean":
+            s = float(jnp.sum(jnp.where(v, c, 0)))
+            n = float(jnp.sum(v))
+            out[f"mean_{col}"] = s / max(n, 1.0)
+        elif op == "min":
+            out[f"min_{col}"] = float(jnp.min(jnp.where(v, c, jnp.inf)))
+        elif op == "max":
+            out[f"max_{col}"] = float(jnp.max(jnp.where(v, c, -jnp.inf)))
+    return out

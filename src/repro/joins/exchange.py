@@ -1,0 +1,102 @@
+"""Data-exchange phase: broadcast and shuffle (paper §2.1.1).
+
+Global-view implementations on stacked ``(p, cap)`` tables. The same
+per-partition send-side logic runs unchanged inside ``shard_map`` in
+``distributed.py``, with the axis transpose replaced by ``lax.all_to_all``
+and the replication by ``lax.all_gather`` — the global-view functions are
+the single-device-executable semantic spec of the collectives.
+
+Every exchange returns an ``ExchangeReport`` whose byte counts are *measured*
+(from live rows), so benchmarks can compare the paper's modeled workloads
+(Eqs. 1, 5) against ground truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .slots import (SHUFFLE_SEED, gather_rows, hash32, pair_capacity,
+                    slot_scatter)
+from .table import Table, concat_partitions
+
+
+@dataclasses.dataclass
+class ExchangeReport:
+    """Measured workload of one exchange (host-side ints/floats)."""
+
+    kind: str                  # "broadcast" | "shuffle"
+    network_bytes: float       # bytes that crossed partition boundaries
+    local_bytes: float         # bytes that stayed partition-local
+    overflow_rows: int = 0     # rows dropped by capacity (skew signal)
+    elided: bool = False       # exchange skipped (already co-partitioned)
+
+
+def _dest_partition(key: jax.Array, p: int) -> jax.Array:
+    return (hash32(key, SHUFFLE_SEED) % jnp.uint32(p)).astype(jnp.int32)
+
+
+def broadcast(table: Table) -> tuple[Table, ExchangeReport]:
+    """Broadcast exchange: every task receives a full replica of ``table``.
+
+    Global view: returns the concatenated unstacked table (each local join
+    task consumes it with in_axes=None == a replica). Network workload is
+    Eq. 1's (p-1)|B|: each of p tasks fetches the (p-1)/p it doesn't hold.
+    """
+    if not table.stacked:
+        raise ValueError("broadcast expects a stacked table")
+    p = table.num_partitions
+    full = concat_partitions(table)
+    rows = full.count()
+    bytes_all = rows * full.row_bytes
+    report = ExchangeReport("broadcast",
+                            network_bytes=(p - 1) * bytes_all,
+                            local_bytes=bytes_all)
+    return full, report
+
+
+def shuffle(table: Table, key: str, capacity_factor: float = 2.0
+            ) -> tuple[Table, ExchangeReport]:
+    """Shuffle exchange: repartition rows by hash(key) across p partitions.
+
+    Slotted all-to-all: each source partition packs rows into per-destination
+    slots of fixed capacity; the (p_src, p_dst, cap) buffer is exchanged
+    (global view: a transpose) and flattened to (p_dst, p_src*cap).
+
+    Network workload is *measured*: bytes of rows whose destination differs
+    from their source (Eq. 5 models this as ((p-1)/p)(|A|+|B|)).
+    """
+    if not table.stacked:
+        raise ValueError("shuffle expects a stacked table")
+    if table.partitioned_by == key:
+        # Already hash-partitioned on this key: the exchange is a no-op
+        # (paper §3.7: all rows pre-placed -> C_shuffle = 0).
+        return table, ExchangeReport("shuffle", 0.0, 0.0, elided=True)
+    p, cap = table.num_partitions, table.capacity
+    pair_cap = pair_capacity(cap, p, capacity_factor)
+
+    dest = _dest_partition(table.column(key), p)  # (p, cap)
+    scat = jax.vmap(lambda d, v: slot_scatter(d, v, p, pair_cap))(
+        dest, table.valid)  # idx: (p_src, p_dst, pair_cap)
+
+    send_cols, send_valid = jax.vmap(gather_rows)(table.columns, scat.idx)
+    # all_to_all == axis transpose in the global view.
+    recv_cols = {n: jnp.swapaxes(c, 0, 1).reshape(p, p * pair_cap)
+                 for n, c in send_cols.items()}
+    recv_valid = jnp.swapaxes(send_valid, 0, 1).reshape(p, p * pair_cap)
+    out = Table(recv_cols, recv_valid, partitioned_by=key)
+
+    # Measured workload: rows that actually crossed partitions.
+    src_ids = jnp.arange(p, dtype=jnp.int32)[:, None]
+    moved = jnp.sum(table.valid & (dest != src_ids))
+    stayed = jnp.sum(table.valid & (dest == src_ids))
+    rb = table.row_bytes
+    report = ExchangeReport(
+        "shuffle",
+        network_bytes=float(moved) * rb,
+        local_bytes=float(stayed) * rb,
+        overflow_rows=int(jnp.sum(scat.overflow)),
+    )
+    return out, report

@@ -1,0 +1,236 @@
+"""The five distributed join methods (paper §2.1, §3) — global-view
+executables on stacked tables.
+
+Each method = exchange phase + local join phase, mirroring the cost model's
+decomposition. All methods produce the same logical result for FK->PK
+equi-joins: the probe table's rows (original partition layout) extended with
+the matched build-side payload columns, and a per-method JoinReport with
+*measured* phase workloads for cost-model validation.
+
+Join types: inner, left_outer, left_semi, left_anti (probe side preserved;
+the engine puts the larger table on the probe side as §3.1.4 prescribes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cost_model import JoinMethod
+from .exchange import ExchangeReport, broadcast, shuffle
+from .local_join import hash_join, nested_loop_join, sort_join
+from .slots import gather_rows
+from .table import Table
+
+
+@dataclasses.dataclass
+class JoinReport:
+    method: JoinMethod
+    exchanges: list          # ExchangeReport per exchanged input
+    local_bytes: float       # measured local-join phase workload (bytes)
+    output_rows: int
+
+
+def _merge_payload(a: Table, b_cols: dict, b_valid_src: jax.Array,
+                   idx: jax.Array, found: jax.Array, join_type: str,
+                   b_key: str) -> Table:
+    """Attach matched B payload to the probe table A (vmapped per partition
+    by the callers; here everything is per-partition arrays)."""
+    cols = dict(a.columns)
+    if join_type == "left_semi":
+        valid = a.valid & found
+        return Table(cols, valid)
+    if join_type == "left_anti":
+        valid = a.valid & ~found
+        return Table(cols, valid)
+    gathered, _ = gather_rows(b_cols, idx)
+    for name, col in gathered.items():
+        out_name = name if name not in cols else f"{name}_r"
+        if join_type == "left_outer":
+            col = jnp.where(found, col, jnp.zeros_like(col))
+        cols[out_name] = col
+    if join_type == "inner":
+        valid = a.valid & found
+    elif join_type == "left_outer":
+        valid = a.valid
+        cols[f"{b_key}_matched"] = found
+    else:
+        raise ValueError(f"unsupported join type {join_type}")
+    return Table(cols, valid)
+
+
+def _finish(a: Table, b_cols: dict, b_valid: jax.Array, res, join_type: str,
+            b_key: str, vmap_b: bool) -> Table:
+    in_axes = (0, 0 if vmap_b else None, 0 if vmap_b else None, 0, 0)
+    fn = lambda at, bc, bv, idx, fnd: _merge_payload(  # noqa: E731
+        at, bc, bv, idx, fnd, join_type, b_key)
+    return jax.vmap(fn, in_axes=in_axes)(a, b_cols, b_valid, res.match_idx,
+                                         res.found)
+
+
+def _local_bytes(a: Table, b_rows: int, b_row_bytes: int, p: int,
+                 build_replicated: bool) -> float:
+    """Measured compute workload: build (p|B| or |B|) + probe (|A| + |B|)."""
+    a_bytes = a.count() * a.row_bytes
+    b_bytes = b_rows * b_row_bytes
+    build = (p if build_replicated else 1) * b_bytes
+    return float(build + a_bytes + b_bytes)
+
+
+# ---------------------------------------------------------------------------
+
+
+def broadcast_hash_join(a: Table, b: Table, a_key: str, b_key: str,
+                        join_type: str = "inner",
+                        use_kernel: bool = False) -> tuple[Table, JoinReport]:
+    """Broadcast B to every partition; radix-hash probe A's partitions."""
+    p = a.num_partitions
+    b_full, ex = broadcast(b)
+    res = jax.vmap(
+        lambda ak, av: hash_join(ak, av, b_full.column(b_key), b_full.valid,
+                                 use_kernel=use_kernel),
+        in_axes=(0, 0))(a.column(a_key), a.valid)
+    out = _finish(a, b_full.columns, b_full.valid, res, join_type, b_key,
+                  vmap_b=False)
+    out.partitioned_by = a.partitioned_by
+    rep = JoinReport(JoinMethod.BROADCAST_HASH, [ex],
+                     _local_bytes(a, b_full.count(), b_full.row_bytes, p,
+                                  build_replicated=True),
+                     out.count())
+    return out, rep
+
+
+def shuffle_hash_join(a: Table, b: Table, a_key: str, b_key: str,
+                      join_type: str = "inner",
+                      capacity_factor: float = 2.0,
+                      use_kernel: bool = False) -> tuple[Table, JoinReport]:
+    """Shuffle both sides by key; radix-hash join each co-partition."""
+    p = a.num_partitions
+    a_sh, ex_a = shuffle(a, a_key, capacity_factor)
+    b_sh, ex_b = shuffle(b, b_key, capacity_factor)
+    res = jax.vmap(
+        lambda ak, av, bk, bv: hash_join(ak, av, bk, bv,
+                                         use_kernel=use_kernel)
+    )(a_sh.column(a_key), a_sh.valid, b_sh.column(b_key), b_sh.valid)
+    out = _finish(a_sh, b_sh.columns, b_sh.valid, res, join_type, b_key,
+                  vmap_b=True)
+    out.partitioned_by = a_key
+    rep = JoinReport(JoinMethod.SHUFFLE_HASH, [ex_a, ex_b],
+                     _local_bytes(a_sh, b_sh.count(), b_sh.row_bytes, p,
+                                  build_replicated=False),
+                     out.count())
+    return out, rep
+
+
+def shuffle_sort_join(a: Table, b: Table, a_key: str, b_key: str,
+                      join_type: str = "inner",
+                      capacity_factor: float = 2.0,
+                      use_kernel: bool = False) -> tuple[Table, JoinReport]:
+    """Shuffle both sides by key; sort-merge join each co-partition."""
+    a_sh, ex_a = shuffle(a, a_key, capacity_factor)
+    b_sh, ex_b = shuffle(b, b_key, capacity_factor)
+    res = jax.vmap(
+        lambda ak, av, bk, bv: sort_join(ak, av, bk, bv,
+                                         use_kernel_sort=use_kernel)
+    )(a_sh.column(a_key), a_sh.valid, b_sh.column(b_key), b_sh.valid)
+    out = _finish(a_sh, b_sh.columns, b_sh.valid, res, join_type, b_key,
+                  vmap_b=True)
+    out.partitioned_by = a_key
+    # Sort join's measured compute adds the n log n sort passes; we report
+    # the touched bytes (sort reads+writes both sides ~log passes).
+    import math
+    pa = max(a_sh.count() / a_sh.num_partitions, 1.0)
+    pb = max(b_sh.count() / b_sh.num_partitions, 1.0)
+    sort_bytes = (a_sh.count() * a_sh.row_bytes * math.log2(max(pa, 1.0) + 1)
+                  + b_sh.count() * b_sh.row_bytes * math.log2(max(pb, 1.0) + 1))
+    merge_bytes = (a_sh.count() * a_sh.row_bytes
+                   + b_sh.count() * b_sh.row_bytes)
+    rep = JoinReport(JoinMethod.SHUFFLE_SORT, [ex_a, ex_b],
+                     float(sort_bytes + merge_bytes), out.count())
+    return out, rep
+
+
+def broadcast_nl_join(a: Table, b: Table,
+                      predicate: Callable[[dict, dict], jax.Array],
+                      join_type: str = "inner",
+                      b_key: str = "") -> tuple[Table, JoinReport]:
+    """Broadcast B; nested-loop each A partition against the replica."""
+    p = a.num_partitions
+    b_full, ex = broadcast(b)
+    res = jax.vmap(
+        lambda acols, av: nested_loop_join(acols, av, b_full.columns,
+                                           b_full.valid, predicate),
+        in_axes=(0, 0))(a.columns, a.valid)
+    out = _finish(a, b_full.columns, b_full.valid, res, join_type, b_key,
+                  vmap_b=False)
+    nl_bytes = float(a.count() * a.row_bytes
+                     + a.count() * b_full.count() * b_full.row_bytes / 1.0)
+    rep = JoinReport(JoinMethod.BROADCAST_NL, [ex], nl_bytes, out.count())
+    return out, rep
+
+
+def cartesian_join(a: Table, b: Table,
+                   predicate: Callable[[dict, dict], jax.Array],
+                   join_type: str = "inner",
+                   b_key: str = "") -> tuple[Table, JoinReport]:
+    """Shuffle-NL: co-shuffle by a synthetic round-robin key so every
+    (A-partition, B-partition) pair meets once; NL within pairs.
+
+    Implementation mirrors Spark's CartesianProduct for *selective*
+    predicates with first-match semantics (the engine's NL joins resolve at
+    most one build match per probe row — sufficient for the non-equi
+    predicates in the query suite).
+    """
+    p = a.num_partitions
+    b_full, ex = broadcast(b)  # logically a shuffle-replication; see report
+    res = jax.vmap(
+        lambda acols, av: nested_loop_join(acols, av, b_full.columns,
+                                           b_full.valid, predicate),
+        in_axes=(0, 0))(a.columns, a.valid)
+    out = _finish(a, b_full.columns, b_full.valid, res, join_type, b_key,
+                  vmap_b=False)
+    # Cartesian's exchange is a shuffle of both sides (Eq. 5): measure it so.
+    rows_b = b_full.count()
+    shuffle_like = ExchangeReport(
+        "shuffle",
+        network_bytes=(p - 1) / p * (a.count() * a.row_bytes
+                                     + rows_b * b_full.row_bytes),
+        local_bytes=(a.count() * a.row_bytes + rows_b * b_full.row_bytes) / p)
+    nl_bytes = float(a.count() * a.row_bytes
+                     + a.count() / p * rows_b * b_full.row_bytes)
+    rep = JoinReport(JoinMethod.CARTESIAN, [shuffle_like], nl_bytes,
+                     out.count())
+    return out, rep
+
+
+# ---------------------------------------------------------------------------
+
+EQUI_METHODS = {
+    JoinMethod.BROADCAST_HASH: broadcast_hash_join,
+    JoinMethod.SHUFFLE_HASH: shuffle_hash_join,
+    JoinMethod.SHUFFLE_SORT: shuffle_sort_join,
+}
+
+
+def run_equi_join(method: JoinMethod, a: Table, b: Table, a_key: str,
+                  b_key: str, join_type: str = "inner",
+                  use_kernel: bool = False,
+                  capacity_factor: float = 2.0) -> tuple[Table, JoinReport]:
+    """Dispatch an equi-join to the selected physical method."""
+    if method in (JoinMethod.BROADCAST_NL, JoinMethod.CARTESIAN):
+        pred = lambda ac, bc: ac[a_key] == bc[b_key]  # noqa: E731
+        fn = (broadcast_nl_join if method is JoinMethod.BROADCAST_NL
+              else cartesian_join)
+        return fn(a, b, pred, join_type, b_key)
+    if method is JoinMethod.BROADCAST_HASH:
+        return broadcast_hash_join(a, b, a_key, b_key, join_type, use_kernel)
+    if method is JoinMethod.SHUFFLE_HASH:
+        return shuffle_hash_join(a, b, a_key, b_key, join_type,
+                                 capacity_factor, use_kernel)
+    if method is JoinMethod.SHUFFLE_SORT:
+        return shuffle_sort_join(a, b, a_key, b_key, join_type,
+                                 capacity_factor, use_kernel)
+    raise ValueError(f"unknown method {method}")

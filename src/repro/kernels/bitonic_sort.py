@@ -1,0 +1,75 @@
+"""bitonic_sort — TPU Pallas kernel: in-VMEM tile sort for the sort join.
+
+The shuffle-sort join's local phase sorts each partition by key. On TPU the
+tile-level primitive is a bitonic network: data-independent compare-exchange
+stages that vectorize perfectly on the VPU (no data-dependent control flow).
+This kernel sorts one power-of-two tile of (key, payload) pairs entirely in
+VMEM; larger arrays are handled by the ops-level wrapper (tile sort + merge,
+or XLA sort fallback).
+
+The compare-exchange partner ``i ^ j`` is expressed with static reshapes
+(N/(2j), 2, j) instead of gathers: element (m, 0, t) pairs with (m, 1, t).
+Stages are unrolled at trace time (log2(N)^2 stages, N <= 4096).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_TILE = 4096
+
+
+def _bitonic_kernel(key_ref, val_ref, key_out, val_out, *, n: int):
+    keys = key_ref[...]
+    vals = val_ref[...]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            kr = keys.reshape(n // (2 * j), 2, j)
+            vr = vals.reshape(n // (2 * j), 2, j)
+            lo_k, hi_k = kr[:, 0, :], kr[:, 1, :]
+            lo_v, hi_v = vr[:, 0, :], vr[:, 1, :]
+            # Ascending iff (i & k) == 0 for the element's global index.
+            base = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), j), 0)
+            idx = base * 2 * j + jax.lax.broadcasted_iota(
+                jnp.int32, (n // (2 * j), j), 1)
+            asc = (idx & k) == 0
+            swap = jnp.where(asc, lo_k > hi_k, lo_k < hi_k)
+            new_lo_k = jnp.where(swap, hi_k, lo_k)
+            new_hi_k = jnp.where(swap, lo_k, hi_k)
+            new_lo_v = jnp.where(swap, hi_v, lo_v)
+            new_hi_v = jnp.where(swap, lo_v, hi_v)
+            keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+            vals = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(n)
+            j //= 2
+        k *= 2
+    key_out[...] = keys
+    val_out[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_tile(keys: jax.Array, values: jax.Array, *,
+                      interpret: bool = True):
+    """Sort one power-of-two tile (N <= 4096) of int32 (key, value) pairs
+    ascending by key. Returns (sorted_keys, permuted_values)."""
+    n = keys.shape[0]
+    if n & (n - 1) or n > MAX_TILE:
+        raise ValueError(f"tile size must be a power of two <= {MAX_TILE}, "
+                         f"got {n}")
+    if keys.dtype != jnp.int32 or values.dtype != jnp.int32:
+        raise TypeError("bitonic_sort_tile expects int32 keys and values")
+    return pl.pallas_call(
+        functools.partial(_bitonic_kernel, n=n),
+        in_specs=[pl.BlockSpec((n,), lambda: (0,)),
+                  pl.BlockSpec((n,), lambda: (0,))],
+        out_specs=[pl.BlockSpec((n,), lambda: (0,)),
+                   pl.BlockSpec((n,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(keys, values)

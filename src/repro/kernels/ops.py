@@ -1,0 +1,47 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On the CPU CI container the kernels run in interpret mode (the kernel body
+executes in Python, validating the exact TPU program); on a TPU backend they
+compile natively. Callers use these wrappers, never pallas_call directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitonic_sort import MAX_TILE, bitonic_sort_tile
+from .partition_hist import partition_hist
+from .tiled_probe import tiled_probe
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def probe(a_keys: jax.Array, b_keys: jax.Array, *, ta: int = 256,
+          tb: int = 512) -> jax.Array:
+    """First-match index of each probe key in the build keys (-1 if none)."""
+    return tiled_probe(a_keys, b_keys, ta=ta, tb=tb, interpret=_interpret())
+
+
+def hist(dest: jax.Array, nd: int, *, tn: int = 1024) -> jax.Array:
+    """Partition-destination histogram (skew/capacity statistics)."""
+    return partition_hist(dest, nd=nd, tn=tn, interpret=_interpret())
+
+
+def sort_pairs(keys: jax.Array, values: jax.Array):
+    """Ascending sort of int32 (key, value) pairs.
+
+    Uses the in-VMEM bitonic kernel for power-of-two tiles up to MAX_TILE
+    (the TPU tile primitive); falls back to XLA variadic sort for other
+    shapes (which XLA itself lowers to a bitonic network on TPU).
+    """
+    n = keys.shape[0]
+    if n and not (n & (n - 1)) and n <= MAX_TILE:
+        return bitonic_sort_tile(keys, values, interpret=_interpret())
+    order = jnp.argsort(keys)
+    return keys[order], values[order]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tiled_probe_ref(a_keys: jnp.ndarray, b_keys: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = first j with b_keys[j] == a_keys[i], else -1 (O(Na*Nb))."""
+    eq = a_keys[:, None] == b_keys[None, :]
+    nb = b_keys.shape[0]
+    col = jnp.arange(nb, dtype=jnp.int32)[None, :]
+    big = jnp.iinfo(jnp.int32).max
+    first = jnp.min(jnp.where(eq, col, big), axis=1)
+    return jnp.where(first == big, -1, first).astype(jnp.int32)
+
+
+def partition_hist_ref(dest: jnp.ndarray, nd: int) -> jnp.ndarray:
+    """counts[k] = #{i : dest[i] == k} (dest < 0 ignored)."""
+    valid = (dest >= 0).astype(jnp.int32)
+    return jnp.bincount(jnp.where(valid == 1, dest, 0), weights=valid,
+                        length=nd).astype(jnp.int32)
+
+
+def bitonic_sort_ref(keys: jnp.ndarray, values: jnp.ndarray):
+    """Stable ascending sort of (key, value) pairs by key."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], values[order]

@@ -1,0 +1,86 @@
+"""tiled_probe — TPU Pallas kernel for the probe step of the hash-family joins.
+
+TPU adaptation (DESIGN.md §2): a chaining hash map is pointer-chasing and
+hostile to the VPU/MXU. The TPU-native probe is a *dense tiled key match*:
+stream (TA,)-tiles of probe keys and (TB,)-tiles of build keys through VMEM,
+compute the TA x TB equality matrix on the VPU, and reduce each row to the
+first matching build-side index. The radix-bucketed caller (joins.local_join)
+bounds TB per probe row, giving the hash join's O(|A| + |B|) workload; this
+kernel is the inner dense primitive.
+
+Grid: (Na // TA, Nb // TB); the build axis is the innermost (fastest) grid
+dimension, so the output tile for a fixed probe tile stays resident while
+build tiles stream past (accumulator pattern).
+
+No-match sentinel inside the kernel is INT32_MAX (monotone under min-
+accumulation); the public wrapper converts it to -1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+# Hardware-aligned defaults: lanes = 128, probe tile a multiple of 8 sublanes.
+DEFAULT_TA = 256
+DEFAULT_TB = 512
+
+
+def _probe_kernel(a_ref, b_ref, out_ref, *, tb: int):
+    """One (TA, TB) tile: out[i] = min(out[i], first j where b[j] == a[i])."""
+    jb = pl.program_id(1)
+
+    @pl.when(jb == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, INT32_MAX)
+
+    a = a_ref[...]  # (TA,)
+    b = b_ref[...]  # (TB,)
+    # (TA, TB) equality matrix on the VPU. TPU requires >=2d iota.
+    eq = a[:, None] == b[None, :]
+    col = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1) + jb * tb
+    cand = jnp.min(jnp.where(eq, col, INT32_MAX), axis=1)
+    out_ref[...] = jnp.minimum(out_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb", "interpret"))
+def tiled_probe(a_keys: jax.Array, b_keys: jax.Array, *,
+                ta: int = DEFAULT_TA, tb: int = DEFAULT_TB,
+                interpret: bool = True) -> jax.Array:
+    """First-match probe: out[i] = min{{j : b_keys[j] == a_keys[i]}} else -1.
+
+    Both inputs are int32; callers encode invalid rows with distinct negative
+    sentinels so they can never match. Shapes are padded to tile multiples.
+    """
+    if a_keys.dtype != jnp.int32 or b_keys.dtype != jnp.int32:
+        raise TypeError("tiled_probe expects int32 keys")
+    na, nb = a_keys.shape[0], b_keys.shape[0]
+    ta = min(ta, max(8, na))
+    tb = min(tb, max(128, nb))
+    pa = (-na) % ta
+    pb = (-nb) % tb
+    # Pad with non-matching sentinels (a: -1, b: -2).
+    a_pad = jnp.pad(a_keys, (0, pa), constant_values=-1)
+    b_pad = jnp.pad(b_keys, (0, pb), constant_values=-2)
+
+    grid = (a_pad.shape[0] // ta, b_pad.shape[0] // tb)
+    out = pl.pallas_call(
+        functools.partial(_probe_kernel, tb=tb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ta,), lambda i, j: (i,)),
+            pl.BlockSpec((tb,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((ta,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((a_pad.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(a_pad, b_pad)
+    out = out[:na]
+    # matches landing in the padded tail (a probe key equal to the pad
+    # sentinel -2) are not real build rows — found by hypothesis.
+    return jnp.where((out == INT32_MAX) | (out >= nb), -1, out)

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: build the production
+mesh, derive the RelShard plan, lower + compile the cell's entry point
+(train_step / prefill / serve_step) against ShapeDtypeStruct inputs (no
+allocation), print memory_analysis + cost_analysis, and persist the
+roofline terms to experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import ARCH_ALIASES, ARCH_IDS, get_config          # noqa: E402
+from ..core.relshard import plan_model                            # noqa: E402
+from ..models import lm                                           # noqa: E402
+from ..models.config import SHAPES, SHAPE_BY_NAME, shape_applicable  # noqa: E402
+from ..training.optimizer import OptConfig                        # noqa: E402
+from ..training.train_loop import make_train_step                 # noqa: E402
+from .mesh import make_production_mesh, mesh_axes                 # noqa: E402
+from .roofline import model_flops, roofline_from_compiled         # noqa: E402
+from .specs import input_specs, model_shardings                   # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower + compile one cell; returns (record, compiled)."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPE_BY_NAME[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": skip}, None
+    if shape_name == "long_500k" and cfg.attn_window == 0 \
+            and cfg.family.value == "hybrid":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_window=4096)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(mesh)
+    plan = plan_model(cfg, axes, shape)
+    specs = input_specs(cfg, shape, plan, mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(name=cfg.optimizer)
+        p_sds, o_sds, _ = model_shardings(cfg, plan, mesh, opt_cfg)
+        step = make_train_step(cfg, plan, mesh, opt_cfg)
+        batch = {k: v for k, v in specs.items()}
+        fn = jax.jit(step,
+                     in_shardings=(jax.tree.map(lambda s: s.sharding, p_sds),
+                                   jax.tree.map(lambda s: s.sharding, o_sds),
+                                   jax.tree.map(lambda s: s.sharding, batch)),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(p_sds, o_sds, batch)
+    elif shape.kind == "prefill":
+        p_sds, _, _ = model_shardings(cfg, plan, mesh)
+
+        def entry(params, tokens, cond_emb=None):
+            return lm.prefill(params, cfg, plan, mesh, tokens, cond_emb)
+        args = [p_sds, specs["tokens"]]
+        if "cond_emb" in specs:
+            args.append(specs["cond_emb"])
+        lowered = jax.jit(entry).lower(*args)
+    else:  # decode
+        p_sds, _, _ = model_shardings(cfg, plan, mesh)
+
+        def entry(params, tokens, cache):
+            return lm.decode_step(params, cfg, plan, mesh, tokens, cache)
+        lowered = jax.jit(entry).lower(p_sds, specs["tokens"],
+                                       specs["cache"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    n_dev = mesh.devices.size
+    hlo = compiled.as_text()
+    rf = roofline_from_compiled(compiled, n_dev, hlo)
+    mf = model_flops(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": n_dev,
+        "plan": {"embed": plan.embed_strategy, "head": plan.head_strategy,
+                 "moe": plan.moe_strategy, "w": plan.w},
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_per_device": (mem.argument_size_in_bytes
+                                         + mem.output_size_in_bytes
+                                         + mem.temp_size_in_bytes
+                                         - mem.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_device": rf.flops / n_dev,
+                 "bytes_per_device": rf.hbm_bytes / n_dev},
+        "collectives_per_device": rf.per_collective,
+        "roofline": {"compute_s": rf.compute_s, "memory_s": rf.memory_s,
+                     "collective_s": rf.collective_s, "bound": rf.bound,
+                     "step_time_s": rf.step_time_s()},
+        "model_flops": mf,
+        "model_flops_ratio": rf.model_flops_ratio(mf),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return record, compiled
+
+
+def run_and_save(arch, shape_name, multi_pod, out_dir=RESULTS_DIR,
+                 overrides=None, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multi" if multi_pod else "single"
+    fname = os.path.join(out_dir,
+                         f"{arch}_{shape_name}_{mesh_tag}{tag}.json")
+    try:
+        record, compiled = lower_cell(arch, shape_name, multi_pod, overrides)
+        if compiled is not None:
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    with open(fname, "w") as f:
+        json.dump(record, f, indent=1)
+    status = record["status"]
+    extra = (f" bound={record['roofline']['bound']}"
+             f" step={record['roofline']['step_time_s']:.4f}s"
+             if status == "ok" else
+             record.get("reason", record.get("error", ""))[:120])
+    print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_tag:6s} "
+          f"{status.upper():5s} {extra}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (hyphenated ok)")
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((ARCH_ALIASES.get(args.arch, args.arch), args.shape))
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = "multi" if mp else "single"
+            fname = os.path.join(args.out,
+                                 f"{arch}_{shape_name}_{tag}.json")
+            if args.skip_existing and os.path.exists(fname):
+                with open(fname) as f:
+                    if json.load(f).get("status") in ("ok", "skip"):
+                        continue
+            rec = run_and_save(arch, shape_name, mp, args.out)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skip"
+            n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` gives FLOPs/bytes (per-device program; multiply by chip
+count for cluster totals). collective_bytes is parsed from the post-SPMD
+module text: per collective op, wire bytes per device are estimated from
+the result shape, the participant group size, and the op's ring-algorithm
+factor, then multiplied by the chip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e target constants.
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|((?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+    r"f64)\[[0-9,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_TUPLE_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_bytes(line: str) -> float:
+    """Total result bytes of a (possibly tuple-shaped) collective op."""
+    # take the result shape(s): text between '= ' and the op name
+    m = re.search(r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|"
+                  r"all-to-all|collective-permute)", line)
+    if not m:
+        return 0.0
+    return sum(_shape_bytes(d, s)
+               for d, s in _TUPLE_SHAPE_RE.findall(m.group(1)))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    return len(m.group(1).split(","))
+
+
+def parse_collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (one program execution)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done" in line:
+            continue  # paired with -start; counted once
+        g = _group_size(line, n_devices)
+        b = _line_bytes(line)
+        if g <= 1 or b == 0:
+            continue
+        ring = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2 * b * ring
+        elif kind == "all-gather":
+            wire = b * ring              # result is the gathered buffer
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)           # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = b * ring
+        else:  # collective-permute
+            wire = b
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # cluster total
+    hbm_bytes: float              # cluster total
+    collective_bytes: float       # cluster total (wire)
+    chips: int
+    per_collective: Dict[str, float]
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bound: str = ""
+
+    def __post_init__(self):
+        self.compute_s = self.flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hbm_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * LINK_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bound = max(terms, key=terms.get)
+
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def model_flops_ratio(self, model_flops: float) -> float:
+        return model_flops / self.flops if self.flops else 0.0
+
+
+def roofline_from_compiled(compiled, n_devices: int,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    """Derive the three terms from the post-SPMD module via the trip-count-
+    aware analyzer (hlo_cost) — XLA's own cost_analysis counts while bodies
+    once, under-reporting scanned models by ~n_layers."""
+    from .hlo_cost import analyze
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    summary = analyze(text, default_group=n_devices)
+    return Roofline(flops=summary.flops * n_devices,
+                    hbm_bytes=summary.bytes_accessed * n_devices,
+                    collective_bytes=summary.total_collective_bytes
+                    * n_devices,
+                    chips=n_devices,
+                    per_collective=summary.collective_wire_bytes)
+
+
+def model_flops(cfg, shape, per_token_factor: float = 6.0) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts one token/seq."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        return 2.0 * n * tokens     # forward only
+    tokens = shape.global_batch * shape.seq_len
+    factor = per_token_factor if shape.kind == "train" else 2.0
+    return factor * n * tokens

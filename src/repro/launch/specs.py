@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct stand-ins for every entry-point input (dry-run inputs:
+weak-type-correct, shardable, no device allocation) and the sharding trees
+for each (arch x shape x mesh) cell."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core.relshard import ShardingPlan
+from ..models import lm
+from ..models.config import ModelConfig, ShapeConfig
+from ..training.optimizer import OptConfig, init_opt_state, opt_state_specs
+
+
+def _batch_shards(plan: ShardingPlan, mesh) -> int:
+    return math.prod(mesh.shape[a] for a in plan.batch_axes)
+
+
+def batch_pspec(plan: ShardingPlan, mesh, global_batch: int) -> P:
+    """Batch dim sharding; replicated when the batch doesn't divide (e.g.
+    long_500k's single sequence — model-parallel only, data axes idle)."""
+    if global_batch % _batch_shards(plan, mesh) == 0:
+        return P(plan.batch_axes)
+    return P()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan,
+                mesh) -> Dict[str, Any]:
+    """ShapeDtypeStructs + NamedShardings for the cell's model inputs."""
+    B = shape.global_batch
+    bp = batch_pspec(plan, mesh, B)
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    if shape.kind == "decode":
+        out = {"tokens": sds((B, 1), jnp.int32, bp)}
+        cache = lm.init_cache  # structure via eval_shape below
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_cache(cfg, B, shape.seq_len))
+        out["cache"] = jax.tree.map(
+            lambda s: sds(s.shape, s.dtype,
+                          _cache_pspec(s.shape, cfg, plan, mesh, B)),
+            cache_shape)
+        return out
+
+    S_text = shape.seq_len - cfg.n_cond_tokens
+    out = {"tokens": sds((B, S_text), jnp.int32, bp)}
+    if cfg.n_cond_tokens:
+        out["cond_emb"] = sds((B, cfg.n_cond_tokens, cfg.d_model),
+                              jnp.bfloat16, bp)
+    return out
+
+
+def _cache_pspec(shp: Tuple[int, ...], cfg: ModelConfig, plan: ShardingPlan,
+                 mesh, B: int) -> P:
+    """Cache sharding: batch dim over data axes when divisible; otherwise
+    shard the sequence dim of KV caches over the data axes (sequence-
+    sharded long-context decode) and KV heads over model when divisible."""
+    bs = _batch_shards(plan, mesh)
+    model = plan.model_axis
+    m = mesh.shape[model]
+    if len(shp) == 1:   # pos
+        return P()
+    batch_ok = (B % bs == 0)
+    bdim = plan.batch_axes if batch_ok else None
+    if len(shp) == 5 and shp[2] >= 1024:    # (L/seg, B, S, G, hd) KV cache
+        sdim = None if batch_ok else plan.batch_axes
+        gdim = model if shp[3] % m == 0 else None
+        return P(None, bdim, sdim, gdim, None)
+    if len(shp) >= 3:
+        return P(None, bdim, *(None,) * (len(shp) - 2))
+    return P(None, bdim)
+
+
+def model_shardings(cfg: ModelConfig, plan: ShardingPlan, mesh,
+                    opt_cfg: OptConfig | None = None):
+    """(param ShapeDtypeStructs+shardings, opt state ditto, spec trees)."""
+    params_shape = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = lm.param_specs(cfg, params_shape, plan)
+    p_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        params_shape, specs, is_leaf=lambda x: isinstance(
+            x, jax.ShapeDtypeStruct))
+    if opt_cfg is None:
+        return p_sds, None, specs
+    opt_shape = jax.eval_shape(lambda: init_opt_state(opt_cfg, params_shape))
+    o_specs = opt_state_specs(opt_cfg, specs)
+    o_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        opt_shape, o_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return p_sds, o_sds, specs

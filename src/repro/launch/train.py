@@ -1,0 +1,58 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --batch 8 --seq 256 --smoke --ckpt /tmp/ckpt [--resume]
+
+On the CI container this drives the smoke-size configs on a host mesh; on
+real hardware the same entry point takes ``--data-par/--model-par`` matching
+the slice topology. Fault tolerance: periodic atomic checkpoints + resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import ARCH_ALIASES, get_config, get_smoke_config
+from ..core.relshard import plan_model
+from ..models.config import ShapeConfig
+from ..training.optimizer import OptConfig
+from ..training.train_loop import train
+from .mesh import make_host_mesh, mesh_axes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    args = ap.parse_args()
+
+    arch = ARCH_ALIASES.get(args.arch, args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    mesh = make_host_mesh(args.data_par, args.model_par)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    plan = plan_model(cfg, mesh_axes(mesh), shape,
+                      fsdp=args.data_par > 1)
+    print(plan.explain())
+    opt = OptConfig(name=cfg.optimizer, lr=args.lr,
+                    grad_dtype=args.grad_dtype)
+    train(cfg, plan, mesh, steps=args.steps, global_batch=args.batch,
+          seq_len=args.seq, opt_cfg=opt, ckpt_dir=args.ckpt or None,
+          ckpt_every=args.ckpt_every, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

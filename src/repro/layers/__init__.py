@@ -1,0 +1,2 @@
+"""Model layers: norms/rope/mlp (common), GQA attention, MoE with
+RelJoin-planned dispatch, Mamba2 SSD, RWKV6, planned embeddings."""

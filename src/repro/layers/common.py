@@ -1,0 +1,88 @@
+"""Shared building blocks: RMSNorm, rotary embeddings, MLP variants.
+
+Parameters are plain dict pytrees (framework-free); every layer exposes
+``init(key, cfg) -> params`` and a pure ``apply``. Compute dtype is bf16
+with fp32 params and fp32 softmax/norm accumulation (mixed precision).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, PARAM_DTYPE) * scale)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), PARAM_DTYPE)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    """f32 is confined to the per-row variance reduction (a (B,S) scalar);
+    the normalize/scale multiply stays bf16 so no f32 (B,S,d) tensor
+    materializes (the f32 residual chains dominated the memory roofline
+    term before this: ~5 full-width f32 tensors per layer)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(COMPUTE_DTYPE)
+    return x.astype(COMPUTE_DTYPE) * inv * params["scale"].astype(
+        COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-dim rotation, NTK-free base theta)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)             # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., None, :]                      # (...,S,1,half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GEGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, activation: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"w_gate": _dense_init(k1, (d, ff)),
+                "w_up": _dense_init(k2, (d, ff)),
+                "w_down": _dense_init(k3, (ff, d))}
+    return {"w_up": _dense_init(k1, (d, ff)),
+            "w_down": _dense_init(k2, (ff, d))}
+
+
+def mlp_apply(params, x, activation: str = "swiglu"):
+    xc = x.astype(COMPUTE_DTYPE)
+    if activation in ("swiglu", "geglu"):
+        gate = xc @ params["w_gate"].astype(COMPUTE_DTYPE)
+        up = xc @ params["w_up"].astype(COMPUTE_DTYPE)
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(
+            gate)
+        return (act * up) @ params["w_down"].astype(COMPUTE_DTYPE)
+    up = xc @ params["w_up"].astype(COMPUTE_DTYPE)
+    return jax.nn.gelu(up) @ params["w_down"].astype(COMPUTE_DTYPE)

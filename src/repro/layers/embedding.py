@@ -1,0 +1,187 @@
+"""Embedding lookup and LM head with RelJoin-planned distribution.
+
+The lookup is an equi-join: token ids (probe side A) against the vocab
+table (build side B). The planner (repro.core.relshard) chooses:
+
+  * ``replicate`` (broadcast-hash analogue): table replicated over the
+    model axis; lookup is a local take. Costs one table broadcast
+    ((p-1)|B|, amortized to the FSDP all-gather in training).
+  * ``vocab_parallel`` (shuffle-hash analogue): table sharded over vocab;
+    each shard resolves its own ids and the partials are all-reduced —
+    moving |A|-sized activations instead of the |B|-sized table.
+
+The vocab-parallel cross-entropy never materializes replicated logits: max
+and sum-exp are reduced across shards (the |A| vs |B| trade again).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .common import COMPUTE_DTYPE, PARAM_DTYPE
+
+
+def _constrain_table(table, mesh, spec: P):
+    """Cast to compute dtype, then pin the compute-time sharding so the
+    FSDP gather moves bf16 (and grads reduce-scatter in bf16)."""
+    t = table.astype(COMPUTE_DTYPE)
+    if mesh is None:
+        return t
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+
+def embedding_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), PARAM_DTYPE) * 0.02}
+
+
+def head_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), PARAM_DTYPE)
+            * d ** -0.5}
+
+
+def embed_apply(params, ids, *, mesh, batch_axes, model_axis, strategy):
+    """ids: (B, S) int32 -> (B, S, d)."""
+    if strategy == "replicate" or mesh is None:
+        table = _constrain_table(params["table"], mesh, P(None, None))
+        return jnp.take(table, ids, axis=0)
+
+    if strategy != "vocab_parallel":
+        raise ValueError(f"unknown embedding strategy {strategy}")
+
+    def body(table_loc, ids_loc):
+        i = jax.lax.axis_index(model_axis)
+        vshard = table_loc.shape[0]
+        off = i * vshard
+        local = ids_loc - off
+        ok = (local >= 0) & (local < vshard)
+        safe = jnp.clip(local, 0, vshard - 1)
+        out = jnp.take(table_loc, safe, axis=0)
+        out = jnp.where(ok[..., None], out, 0)
+        return jax.lax.psum(out, model_axis)
+
+    table = _constrain_table(params["table"], mesh, P(model_axis, None))
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis), P(batch_axes)),
+        out_specs=P(batch_axes),
+    )(table, ids)
+
+
+CE_CHUNK = 512
+
+
+def _seq_chunked(fn, h, labels):
+    """Stream a per-token computation over sequence chunks: the (B,C,V)
+    logits block is the only vocab-sized temp (recomputed in backward).
+    Pads S up to a chunk multiple (train uses S-1=4095 positions; without
+    padding the chunking silently never fired)."""
+    B, S, d = h.shape
+    if S <= CE_CHUNK:
+        return fn((h, labels))
+    pad = (-S) % CE_CHUNK
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = (S + pad) // CE_CHUNK
+    hc = h.reshape(B, n, CE_CHUNK, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, CE_CHUNK).transpose(1, 0, 2)
+    out = jax.lax.map(jax.checkpoint(fn), (hc, lc))
+    return out.transpose(1, 0, 2).reshape(B, S + pad)[:, :S]
+
+
+def lm_head_loss(params, x, labels, *, mesh, batch_axes, model_axis,
+                 strategy, label_mask=None):
+    """Cross-entropy over the (possibly vocab-sharded) head.
+
+    x: (B, S, d); labels: (B, S). Returns mean loss (fp32 scalar).
+    """
+    xf = x.astype(COMPUTE_DTYPE)
+    if label_mask is None:
+        label_mask = jnp.ones(labels.shape, jnp.float32)
+
+    if strategy == "replicate" or mesh is None:
+        # gold logit via a local gather of the *replicated* table row —
+        # never take_along_axis on sharded logits (GSPMD would all-gather
+        # the full (B,S,V) logits; observed 125 GiB/step on tinyllama).
+        table = _constrain_table(params["table"], mesh, P(None, None))
+
+        def ce_chunk(args):
+            h_c, lab_c = args
+            logits = (h_c @ table.T).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.einsum(
+                "bsd,bsd->bs", h_c, jnp.take(table, lab_c, axis=0),
+                preferred_element_type=jnp.float32)
+            return lse - gold
+
+        loss_tok = _seq_chunked(ce_chunk, xf, labels)
+        loss = loss_tok * label_mask
+        return jnp.sum(loss) / jnp.maximum(jnp.sum(label_mask), 1.0)
+
+    if strategy != "vocab_parallel":
+        raise ValueError(f"unknown head strategy {strategy}")
+
+    def body(table_loc, x_loc, labels_loc, mask_loc):
+        i = jax.lax.axis_index(model_axis)
+        vshard = table_loc.shape[0]
+        off = i * vshard
+        tl = table_loc
+
+        def chunk(args):
+            x_c, lab_c = args
+            logits = (x_c @ tl.T).astype(jnp.float32)      # (B,C,V/p)
+            # distributed logsumexp: shard max -> global max -> sumexp.
+            # stop_gradient on the operand: the logsumexp max shift
+            # carries no gradient, and pmax has no VJP rule — a tangent-free
+            # input keeps autodiff out of the collective.
+            m = jax.lax.pmax(
+                jax.lax.stop_gradient(jnp.max(logits, axis=-1)), model_axis)
+            se = jax.lax.psum(
+                jnp.sum(jnp.exp(logits - m[..., None]), axis=-1),
+                model_axis)
+            lse = m + jnp.log(se)
+            # gold logit: local gather of this shard's table rows.
+            local = lab_c - off
+            ok = (local >= 0) & (local < vshard)
+            safe = jnp.clip(local, 0, vshard - 1)
+            gold_loc = jnp.einsum(
+                "bsd,bsd->bs", x_c, jnp.take(tl, safe, axis=0),
+                preferred_element_type=jnp.float32)
+            gold = jax.lax.psum(jnp.where(ok, gold_loc, 0.0), model_axis)
+            return lse - gold
+
+        loss = _seq_chunked(chunk, x_loc, labels_loc) * mask_loc
+        return (jnp.sum(loss)[None], jnp.sum(mask_loc)[None])
+
+    table = _constrain_table(params["table"], mesh, P(model_axis, None))
+    tot, cnt = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis), P(batch_axes), P(batch_axes),
+                  P(batch_axes)),
+        out_specs=(P(batch_axes), P(batch_axes)),
+    )(table, xf, labels, label_mask)
+    return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def lm_head_logits(params, x, *, mesh, batch_axes, model_axis, strategy):
+    """Decode-time logits. With vocab_parallel the argmax is resolved
+    distributed and only the winning id crosses shards, never the logits."""
+    xf = x.astype(COMPUTE_DTYPE)
+    if strategy == "replicate" or mesh is None:
+        table = _constrain_table(params["table"], mesh, P(None, None))
+        return (xf @ table.T).astype(jnp.float32)
+
+    def body(table_loc, x_loc):
+        return (x_loc @ table_loc.T).astype(jnp.float32)
+
+    table = _constrain_table(params["table"], mesh, P(model_axis, None))
+    # Output stays vocab-sharded (P(..., model)): full logits never
+    # replicate; downstream argmax/sampling reduces across shards in GSPMD.
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis), P(batch_axes)),
+        out_specs=P(batch_axes, None, model_axis),
+    )(table, xf)

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts with RelJoin-planned dispatch.
+
+MoE dispatch IS a distributed join (DESIGN.md §2): tokens (probe side A)
+are matched to experts (build side B). The two physical methods are the
+paper's two exchanges:
+
+  * ``expert_parallel`` (shuffle-hash analogue): experts sharded over the
+    ``model`` mesh axis; token assignments are packed into per-destination
+    slots (the engine's ``slot_scatter``) and moved with ``all_to_all`` —
+    exactly the slotted shuffle of ``repro.joins``.
+  * ``replicate`` (broadcast-hash analogue): every device holds all experts
+    (weights replicated / all-gathered); tokens never move.
+
+``repro.core.relshard`` picks the strategy with the paper's cost equations
+(k vs k0). The router's measured per-expert token counts are the adaptive
+runtime statistics for re-planning capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..joins.slots import slot_scatter
+from .common import COMPUTE_DTYPE, PARAM_DTYPE, _dense_init
+
+
+class MoEAux(NamedTuple):
+    load: jax.Array          # (E,) tokens routed per expert (runtime stat)
+    aux_loss: jax.Array      # load-balancing loss (Switch-style)
+    dropped: jax.Array       # () fraction of assignments dropped by capacity
+
+
+def moe_init(key, d: int, ff: int, n_experts: int):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(kr, (d, n_experts)),
+        "w_gate": jax.random.normal(kg, (n_experts, d, ff), PARAM_DTYPE)
+        * d ** -0.5,
+        "w_up": jax.random.normal(ku, (n_experts, d, ff), PARAM_DTYPE)
+        * d ** -0.5,
+        "w_down": jax.random.normal(kd, (n_experts, ff, d), PARAM_DTYPE)
+        * ff ** -0.5,
+    }
+
+
+def _route(params, x2d, n_experts: int, top_k: int):
+    """x2d: (N, d) -> gates (N, K), expert ids (N, K), aux loss pieces."""
+    logits = (x2d @ params["router"].astype(COMPUTE_DTYPE)).astype(
+        jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # Switch-transformer load balance loss: E * sum_e f_e * p_e.
+    onehot = jax.nn.one_hot(expert_ids[:, 0], n_experts)
+    f = jnp.mean(onehot, axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(f * pbar)
+    load = jnp.sum(jax.nn.one_hot(expert_ids, n_experts,
+                                  dtype=jnp.int32), axis=(0, 1))
+    return gate_vals, expert_ids.astype(jnp.int32), aux, load
+
+
+def _expert_ffn(w_gate, w_up, w_down, xe):
+    """xe: (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate.astype(COMPUTE_DTYPE))
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up.astype(COMPUTE_DTYPE))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      w_down.astype(COMPUTE_DTYPE))
+
+
+def _inverse_slots(idx: jax.Array, n_src: int) -> jax.Array:
+    """Given slots->source idx (nd, cap), return source->flat-slot (n_src,)
+    with -1 for unplaced sources."""
+    flat = idx.reshape(-1)
+    pos = jnp.arange(flat.shape[0], dtype=jnp.int32)
+    inv = jnp.full((n_src,), -1, jnp.int32)
+    return inv.at[jnp.where(flat >= 0, flat, n_src)].set(pos, mode="drop")
+
+
+def _gather0(x, idx):
+    safe = jnp.maximum(idx, 0)
+    out = jnp.take(x, safe, axis=0)
+    mask = (idx >= 0)
+    return jnp.where(mask.reshape(mask.shape + (1,) * (out.ndim - mask.ndim)),
+                     out, 0), mask
+
+
+# ---------------------------------------------------------------------------
+# replicate strategy (broadcast-hash analogue): all experts local.
+# ---------------------------------------------------------------------------
+
+def _moe_replicated(params, x, n_experts, top_k, capacity_factor):
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d).astype(COMPUTE_DTYPE)
+    gates, eids, aux, load = _route(params, x2, n_experts, top_k)
+    N = B * S * top_k
+    tok = jnp.repeat(jnp.arange(B * S, dtype=jnp.int32), top_k)
+    dest = eids.reshape(-1)
+    cap = max(8, int(N / n_experts * capacity_factor))
+    scat = slot_scatter(dest, jnp.ones((N,), bool), n_experts, cap)
+    xe, _ = _gather0(x2, jnp.take(tok, jnp.maximum(scat.idx, 0)))
+    xe = jnp.where((scat.idx >= 0)[..., None], xe, 0)      # (E, cap, d)
+    ye = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], xe)
+    # combine back: scatter expert outputs to assignments, weight, sum over K
+    inv = _inverse_slots(scat.idx, N)                      # (N,)
+    y_asn, mask = _gather0(ye.reshape(-1, d), inv)         # (N, d)
+    y_asn = y_asn * gates.reshape(-1)[:, None].astype(COMPUTE_DTYPE)
+    y2 = jnp.zeros((B * S, d), COMPUTE_DTYPE).at[tok].add(y_asn)
+    dropped = 1.0 - jnp.mean(mask.astype(jnp.float32))
+    return y2.reshape(B, S, d), MoEAux(load, aux, dropped)
+
+
+# ---------------------------------------------------------------------------
+# expert_parallel strategy (shuffle-hash analogue): slotted all_to_all.
+# ---------------------------------------------------------------------------
+
+def _moe_expert_parallel_body(params_loc, x_loc, *, axis, n_experts, top_k,
+                              capacity_factor):
+    """shard_map body. params experts sharded on axis; x replicated over it.
+
+    x_loc: (Bl, S, d); expert weights: (El, d, ff) with El = E/p.
+    """
+    p = jax.lax.axis_size(axis)
+    El = n_experts // p
+    B, S, d = x_loc.shape
+    x2 = x_loc.reshape(B * S, d).astype(COMPUTE_DTYPE)
+    gates, eids, aux, load = _route(params_loc, x2, n_experts, top_k)
+
+    N = B * S * top_k
+    tok = jnp.repeat(jnp.arange(B * S, dtype=jnp.int32), top_k)
+    dest_shard = (eids // El).reshape(-1)                  # owning device
+    local_eid = (eids % El).reshape(-1)                    # expert id there
+    cap = max(8, int(N / p * capacity_factor))
+
+    # exchange 1: tokens -> expert shards (the slotted shuffle).
+    scat = slot_scatter(dest_shard, jnp.ones((N,), bool), p, cap)
+    x_send, _ = _gather0(x2, jnp.take(tok, jnp.maximum(scat.idx, 0)))
+    x_send = jnp.where((scat.idx >= 0)[..., None], x_send, 0)  # (p, cap, d)
+    e_send = jnp.where(scat.idx >= 0,
+                       jnp.take(local_eid, jnp.maximum(scat.idx, 0)), -1)
+    x_recv = jax.lax.all_to_all(x_send, axis, 0, 0)        # (p, cap, d)
+    e_recv = jax.lax.all_to_all(e_send, axis, 0, 0)        # (p, cap)
+
+    # local join: group received tokens by local expert, run the FFN.
+    Nr = p * cap
+    e_flat = e_recv.reshape(Nr)
+    cap2 = max(8, int(Nr / El * capacity_factor))
+    scat2 = slot_scatter(e_flat, e_flat >= 0, El, cap2)
+    xe, _ = _gather0(x_recv.reshape(Nr, d), scat2.idx)     # (El, cap2, d)
+    ye = _expert_ffn(params_loc["w_gate"], params_loc["w_up"],
+                     params_loc["w_down"], xe)
+
+    # reverse local grouping, exchange back, combine.
+    inv2 = _inverse_slots(scat2.idx, Nr)
+    y_recv, m2 = _gather0(ye.reshape(-1, d), inv2)         # (Nr, d)
+    y_back = jax.lax.all_to_all(y_recv.reshape(p, cap, d), axis, 0, 0)
+    inv1 = _inverse_slots(scat.idx, N)
+    y_asn, m1 = _gather0(y_back.reshape(p * cap, d), inv1)  # (N, d)
+    y_asn = y_asn * gates.reshape(-1)[:, None].astype(COMPUTE_DTYPE)
+    y2 = jnp.zeros((B * S, d), COMPUTE_DTYPE).at[tok].add(y_asn)
+
+    dropped = 1.0 - jnp.mean((m1 & (inv1 >= 0)).astype(jnp.float32))
+    # global runtime stats over the data axis shards stay local here; the
+    # trainer psums metrics outside.
+    return y2.reshape(B, S, d), load, aux, dropped
+
+
+def moe_apply(params, x, *, mesh, batch_axes, model_axis, n_experts, top_k,
+              strategy: str, capacity_factor: float = 1.5):
+    """Dispatch through the planned strategy. Returns (y, MoEAux)."""
+    if strategy == "replicate" or mesh is None:
+        return _moe_replicated(params, x, n_experts, top_k, capacity_factor)
+
+    if strategy != "expert_parallel":
+        raise ValueError(f"unknown MoE strategy {strategy}")
+
+    B, S, d = x.shape
+    p = mesh.shape[model_axis]
+    # Train/prefill: the sequence dim is co-sharded over the model axis so
+    # every device dispatches a distinct token slice (no duplicated
+    # routing). Decode (S=1) keeps tokens replicated over model — each
+    # shard redundantly routes the tiny token batch — and the pmean below
+    # both de-duplicates and proves replication to shard_map.
+    seq_shard = S % p == 0 and S >= p
+    x_spec = (P(batch_axes, model_axis, None) if seq_shard
+              else P(batch_axes, None, None))
+    all_axes = tuple(batch_axes) + (model_axis,)
+
+    def body(rp, wg, wu, wd, xl):
+        y, load, aux, dropped = _moe_expert_parallel_body(
+            {"router": rp, "w_gate": wg, "w_up": wu, "w_down": wd}, xl,
+            axis=model_axis, n_experts=n_experts, top_k=top_k,
+            capacity_factor=capacity_factor)
+        # In the decode path tokens are replicated over the model axis, so
+        # the diagnostics (and y) are already invariant there — VMA tracks
+        # this; only reduce over axes where values actually vary.
+        red = all_axes if seq_shard else tuple(batch_axes)
+        aux = jax.lax.pmean(aux, red) if red else aux
+        dropped = jax.lax.pmean(dropped, red) if red else dropped
+        load = (jax.lax.psum(load.astype(jnp.float32), red) if red
+                else load.astype(jnp.float32))
+        if not seq_shard:
+            # y went through the all_to_all roundtrip, which VMA marks as
+            # model-varying even though the copies are identical; the pmean
+            # de-duplicates and proves replication for out_specs.
+            y = jax.lax.pmean(y, model_axis)
+        return y, load, aux, dropped
+
+    y, load, aux, dropped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(model_axis), P(model_axis), P(model_axis), x_spec),
+        out_specs=(x_spec, P(), P(), P()),
+    )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
+      x)
+    return y, MoEAux(load, aux, dropped)

@@ -1,0 +1,151 @@
+"""Mamba2-style SSD block (zamba2's mixer) with chunked-parallel training.
+
+Recurrence (per head h, scalar decay): state (hd, n) evolves as
+
+    S_t = a_t * S_{t-1} + dt_t * (x_t outer B_t),   y_t = S_t @ C_t + D * x_t
+    a_t = exp(-softplus(dt_raw_t) * exp(A_log_h))
+
+Training/prefill uses the exact chunked form: within a chunk the scalar
+decays factor into (t, s) decay matrices (cheap — scalar per pair); across
+chunks a single carried state. Decode keeps the state and applies one step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, PARAM_DTYPE, _dense_init
+
+
+class SSMState(NamedTuple):
+    s: jax.Array   # (B, H, hd, n) carried state
+    conv: jax.Array  # (B, H*hd, k-1) causal-conv tail (decode)
+
+
+CONV_K = 4
+
+
+def ssm_init(key, d_model: int, n_state: int, n_heads: int):
+    d_inner = 2 * d_model
+    hd = d_inner // n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": _dense_init(k1, (d_model,
+                                 2 * d_inner + 2 * n_state + n_heads)),
+        "w_out": _dense_init(k2, (d_inner, d_model)),
+        "conv_w": jax.random.normal(k3, (CONV_K, d_inner), PARAM_DTYPE)
+        * CONV_K ** -0.5,
+        "A_log": jnp.zeros((n_heads,), PARAM_DTYPE),
+        "D": jnp.ones((n_heads,), PARAM_DTYPE),
+        "dt_bias": jnp.full((n_heads,), -2.0, PARAM_DTYPE),
+    }
+
+
+def _split_proj(params, x, d_inner, n_state, n_heads):
+    proj = x.astype(COMPUTE_DTYPE) @ params["w_in"].astype(COMPUTE_DTYPE)
+    z, xs, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n_state,
+               2 * d_inner + 2 * n_state], axis=-1)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xs, conv_w):
+    """Depthwise causal conv over time. xs: (B, S, d_inner)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * conv_w[i].astype(COMPUTE_DTYPE)
+              for i in range(k))
+    return jax.nn.silu(out)
+
+
+def ssm_apply(params, x, *, n_state: int, n_heads: int, chunk: int = 128):
+    """Full-sequence SSD. x: (B, S, d). Returns (y, final SSMState)."""
+    B, S, d = x.shape
+    d_inner = 2 * d
+    hd = d_inner // n_heads
+    z, xs, bmat, cmat, dt_raw = _split_proj(params, x, d_inner, n_state,
+                                            n_heads)
+    xs = _causal_conv(xs, params["conv_w"])
+    dt = jax.nn.softplus((dt_raw.astype(jnp.float32)
+                          + params["dt_bias"]))             # (B,S,H)
+    a_log = -dt * jnp.exp(params["A_log"])                  # (B,S,H) <= 0
+
+    xh = xs.reshape(B, S, n_heads, hd)
+    u = xh * dt[..., None].astype(COMPUTE_DTYPE)            # dt-scaled input
+
+    nc = max(S // chunk, 1)
+    chunk = S // nc
+    assert S % chunk == 0
+    uc = u.reshape(B, nc, chunk, n_heads, hd)
+    bc = bmat.reshape(B, nc, chunk, n_state)
+    cc = cmat.reshape(B, nc, chunk, n_state)
+    al = a_log.reshape(B, nc, chunk, n_heads)
+
+    def chunk_step(s, inp):
+        uc_, bc_, cc_, al_ = inp          # (B,C,H,hd),(B,C,n),(B,C,n),(B,C,H)
+        cum = jnp.cumsum(al_, axis=1)                      # (B,C,H) inclusive
+        total = cum[:, -1]                                 # (B,H)
+        # inter-chunk: y_inter[t] = exp(cum_t) * (S_prev @ C_t)
+        sc = jnp.einsum("bhdn,bcn->bchd", s, cc_.astype(jnp.float32))
+        y_inter = jnp.exp(cum)[..., None] * sc
+        # intra-chunk: pairwise scalar decays exp(cum_t - cum_s), s <= t.
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,C,C,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        kv = jnp.einsum("bsn,btn->bst", bc_.astype(jnp.float32),
+                        cc_.astype(jnp.float32))           # (B,S=s,T=t)
+        w = dec * kv.transpose(0, 2, 1)[..., None]          # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", w,
+                             uc_.astype(jnp.float32))
+        # state update: S' = exp(total) S + sum_s exp(cum_last - cum_s) u_s B_s
+        decay_to_end = jnp.exp(total[:, None, :] - cum)     # (B,C,H)
+        su = jnp.einsum("bshd,bsn,bsh->bhdn", uc_.astype(jnp.float32),
+                        bc_.astype(jnp.float32), decay_to_end)
+        s_new = jnp.exp(total)[..., None, None] * s + su
+        return s_new, (y_inter + y_intra).astype(COMPUTE_DTYPE)
+
+    s0 = jnp.zeros((B, n_heads, hd, n_state), jnp.float32)
+    uc_t = jnp.moveaxis(uc, 1, 0)
+    bc_t = jnp.moveaxis(bc, 1, 0)
+    cc_t = jnp.moveaxis(cc, 1, 0)
+    al_t = jnp.moveaxis(al, 1, 0)
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (uc_t, bc_t, cc_t, al_t))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, n_heads, hd)
+    y = y + params["D"].astype(COMPUTE_DTYPE)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(COMPUTE_DTYPE)
+    conv_tail = jnp.transpose(xs[:, -(CONV_K - 1):, :], (0, 2, 1))
+    return out, SSMState(s_fin, conv_tail)
+
+
+def ssm_decode(params, x, state: SSMState, *, n_state: int, n_heads: int):
+    """One-token step. x: (B, 1, d). Returns (y, new state)."""
+    B, _, d = x.shape
+    d_inner = 2 * d
+    hd = d_inner // n_heads
+    z, xs, bmat, cmat, dt_raw = _split_proj(params, x, d_inner, n_state,
+                                            n_heads)
+    # causal conv with carried tail
+    hist = jnp.concatenate([state.conv,
+                            jnp.transpose(xs, (0, 2, 1))], axis=-1)
+    w = params["conv_w"].astype(COMPUTE_DTYPE)              # (K, d_inner)
+    conv_out = jnp.einsum("bdk,kd->bd", hist[:, :, -CONV_K:], w)
+    xs1 = jax.nn.silu(conv_out)[:, None, :]
+    new_tail = hist[:, :, -(CONV_K - 1):]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])               # (B,H)
+    a = jnp.exp(-dt * jnp.exp(params["A_log"]))             # (B,H)
+    xh = xs1.reshape(B, n_heads, hd)
+    u = xh.astype(jnp.float32) * dt[..., None]
+    outer = jnp.einsum("bhd,bn->bhdn", u, bmat[:, 0].astype(jnp.float32))
+    s_new = a[..., None, None] * state.s + outer
+    y = jnp.einsum("bhdn,bn->bhd", s_new, cmat[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(COMPUTE_DTYPE) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(COMPUTE_DTYPE)
+    return out, SSMState(s_new, new_tail)

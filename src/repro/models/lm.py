@@ -1,0 +1,557 @@
+"""Decoder LM composer: builds params, forward/train/prefill/decode for all
+assigned architecture families, with scan-over-layers and RelShard-planned
+distribution.
+
+Param pytrees are plain nested dicts; per-layer blocks are *stacked* along a
+leading layer axis and consumed by ``lax.scan`` (one compiled block body
+regardless of depth — the only way 94-layer configs compile fast on the
+dry-run host). Sharding is expressed as a congruent tree of PartitionSpecs
+(``param_specs``), derived from leaf paths + the ShardingPlan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.relshard import ShardingPlan
+from ..layers import attention as attn
+from ..layers import common as cm
+from ..layers import embedding as emb
+from ..layers import moe as moe_mod
+from ..layers import rwkv as rwkv_mod
+from ..layers import ssm as ssm_mod
+from .config import Family, ModelConfig
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": emb.embedding_init(keys[0], cfg.vocab, cfg.d_model),
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = emb.head_init(keys[1], cfg.vocab, cfg.d_model)
+
+    if cfg.family is Family.SSM:  # rwkv6
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "tm_norm": cm.rmsnorm_init(cfg.d_model),
+                "time_mix": rwkv_mod.rwkv_init(k1, cfg.d_model,
+                                               cfg.rwkv_head_dim),
+                "cm_norm": cm.rmsnorm_init(cfg.d_model),
+                "channel_mix": rwkv_mod.channel_mix_init(k2, cfg.d_model,
+                                                         cfg.d_ff),
+            }
+        params["blocks"] = _stack_init(one, keys[2], cfg.n_layers)
+        return params
+
+    if cfg.family is Family.HYBRID:  # zamba2
+        heads = cfg.ssm_heads or (2 * cfg.d_model) // 64
+
+        def one(k):
+            return {"norm": cm.rmsnorm_init(cfg.d_model),
+                    "ssm": ssm_mod.ssm_init(k, cfg.d_model, cfg.ssm_state,
+                                            heads)}
+        params["blocks"] = _stack_init(one, keys[2], cfg.n_layers)
+        k1, k2 = jax.random.split(keys[3])
+        params["shared_attn"] = {
+            "attn_norm": cm.rmsnorm_init(cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.kv_heads, cfg.hd),
+            "mlp_norm": cm.rmsnorm_init(cfg.d_model),
+            "mlp": cm.mlp_init(k2, cfg.d_model, cfg.d_ff,
+                               cfg.mlp_activation),
+        }
+        return params
+
+    # dense / moe / vlm / audio: uniform transformer blocks
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        block = {
+            "attn_norm": cm.rmsnorm_init(cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.kv_heads, cfg.hd),
+            "mlp_norm": cm.rmsnorm_init(cfg.d_model),
+        }
+        if cfg.is_moe:
+            block["moe"] = moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                            cfg.n_experts)
+        else:
+            block["mlp"] = cm.mlp_init(k2, cfg.d_model, cfg.d_ff,
+                                       cfg.mlp_activation)
+        return block
+    params["blocks"] = _stack_init(one, keys[2], cfg.n_layers)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+#: leaf name -> (row axis kind, col axis kind) for 2-D weight matrices.
+_COL_SHARDED = {"w_q", "w_k", "w_v", "w_gate", "w_up", "w_in", "w_r", "w_g",
+                "w_kc", "decay_a", "router"}
+_ROW_SHARDED = {"w_o", "w_down", "w_out", "w_vc", "decay_b"}
+
+
+def param_specs(cfg: ModelConfig, params, plan: ShardingPlan):
+    """PartitionSpec tree congruent with ``params``."""
+    fsdp = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    model = plan.model_axis
+
+    replicated_tp = plan.tp == "replicated"
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        stacked = path[0] == "blocks"
+        lead = (None,) if stacked else ()
+        nd = leaf.ndim - len(lead)
+        if replicated_tp and path[0] not in ("embed", "head") and nd == 2 \
+                and (name in _COL_SHARDED or name in _ROW_SHARDED):
+            # storage spreads over fsdp x model; compute gathers both.
+            return P(*lead, fsdp, model)
+        if path[0] in ("embed", "head"):
+            strat = (plan.embed_strategy if path[0] == "embed"
+                     else plan.head_strategy)
+            if strat == "vocab_parallel":
+                return P(model, fsdp)
+            return P(None, fsdp)
+        if name in ("w_gate", "w_up", "w_down") and nd == 3:  # MoE experts
+            if plan.moe_strategy == "expert_parallel":
+                return P(*lead, model, fsdp, None)
+            return P(*lead, None, fsdp, None)
+        if nd == 2:
+            if name in _COL_SHARDED:
+                return P(*lead, fsdp, model)
+            if name in _ROW_SHARDED:
+                return P(*lead, model, fsdp)
+            return P(*lead, None, None)
+        if nd == 1:
+            return P(*lead, None)
+        return P(*lead, *(None,) * nd)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def key_to_names(kp):
+        return tuple(k.key for k in kp)
+
+    flat = {key_to_names(kp): spec_for(key_to_names(kp), leaf)
+            for kp, leaf in paths_leaves}
+
+    def rebuild(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, prefix + (k,)) for k, v in tree.items()}
+        return flat[prefix]
+
+    return rebuild(params)
+
+
+# ---------------------------------------------------------------------------
+# FSDP weight gathering
+# ---------------------------------------------------------------------------
+
+def _strip_fsdp(spec: P, fsdp_axes, strip_model: str | None = None) -> P:
+    """Compute-time sharding: drop the fsdp axes (and, for replicated-TP
+    plans, the model axis) from a param spec."""
+    drop = set(fsdp_axes) | ({strip_model} if strip_model else set())
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a not in drop)
+            out.append(kept if kept else None)
+        else:
+            out.append(None if e in drop else e)
+    return P(*out)
+
+
+def block_compute_shardings(cfg: ModelConfig, params, plan: ShardingPlan,
+                            mesh):
+    """NamedShardings for one scanned block's params with fsdp stripped
+    (leading layer axis removed). Constraining weights to these inside the
+    block body makes XLA emit the FSDP pattern: bf16 all-gather of weights
+    in forward, bf16 reduce-scatter of grads in backward — instead of
+    partial-sum all-reduces over activation-sized tensors."""
+    from jax.sharding import NamedSharding
+    specs = param_specs(cfg, params, plan)
+
+    strip_model = plan.model_axis if plan.tp == "replicated" else None
+
+    def per_block(subtree):
+        return jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, _strip_fsdp(P(*tuple(s)[1:]), plan.fsdp_axes,
+                                  strip_model)),
+            subtree, is_leaf=lambda s: isinstance(s, P))
+
+    out = {"blocks": per_block(specs["blocks"])}
+    if "shared_attn" in specs:
+        out["shared_attn"] = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, _strip_fsdp(s, plan.fsdp_axes, strip_model)),
+            specs["shared_attn"], is_leaf=lambda s: isinstance(s, P))
+    return out
+
+
+def _gather_weights(bp, shardings):
+    """Cast to compute dtype then constrain: the all-gather moves bf16."""
+    if shardings is None:
+        return bp
+
+    def one(w, s):
+        wc = w.astype(cm.COMPUTE_DTYPE) if jnp.issubdtype(
+            w.dtype, jnp.floating) else w
+        return jax.lax.with_sharding_constraint(wc, s)
+    return jax.tree.map(one, bp, shardings)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class ForwardAux(NamedTuple):
+    moe_load: Optional[jax.Array]      # (L, E) router counts (runtime stats)
+    moe_aux_loss: jax.Array            # scalar
+    moe_dropped: jax.Array             # scalar
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _dense_block(bp, x, cfg: ModelConfig, plan, mesh, positions,
+                 lt_schedule=False):
+    h = cm.rmsnorm(bp["attn_norm"], x, cfg.rms_eps)
+    a, _kv = attn.attn_apply(
+        bp["attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+        head_dim=cfg.hd, theta=cfg.rope_theta, positions=positions,
+        window=cfg.attn_window, lower_triangular_schedule=lt_schedule,
+        shard_ctx=(mesh, plan.batch_axes, plan.model_axis))
+    x = x + a
+    h = cm.rmsnorm(bp["mlp_norm"], x, cfg.rms_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_apply(
+            bp["moe"], h, mesh=mesh, batch_axes=plan.batch_axes,
+            model_axis=plan.model_axis, n_experts=cfg.n_experts,
+            top_k=cfg.top_k, strategy=plan.moe_strategy)
+        return x + y, (aux.load, aux.aux_loss, aux.dropped)
+    y = cm.mlp_apply(bp["mlp"], h, cfg.mlp_activation)
+    zero = jnp.zeros((), jnp.float32)
+    return x + y, (jnp.zeros((max(cfg.n_experts, 1),), jnp.float32), zero,
+                   zero)
+
+
+def forward(params, cfg: ModelConfig, plan: ShardingPlan, mesh, tokens,
+            cond_emb=None, lt_schedule: bool = False):
+    """Full-sequence forward to final hidden states.
+
+    tokens: (B, S_text); cond_emb: (B, n_cond, d) stub frontend output.
+    Returns (hidden (B, S_total, d), ForwardAux).
+    """
+    x = emb.embed_apply(params["embed"], tokens, mesh=mesh,
+                        batch_axes=plan.batch_axes,
+                        model_axis=plan.model_axis,
+                        strategy=plan.embed_strategy)
+    if cond_emb is not None:
+        x = jnp.concatenate([cond_emb.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    cs = (block_compute_shardings(cfg, params, plan, mesh)
+          if mesh is not None else None)
+
+    if cfg.family is Family.SSM:
+        def block(x, bp):
+            bp = _gather_weights(bp, cs["blocks"] if cs else None)
+            h = cm.rmsnorm(bp["tm_norm"], x, cfg.rms_eps)
+            st0 = rwkv_mod.RWKVState(
+                jnp.zeros((B, cfg.d_model // cfg.rwkv_head_dim,
+                           cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                          jnp.float32),
+                jnp.zeros((B, cfg.d_model), cm.COMPUTE_DTYPE))
+            y, _st = rwkv_mod.rwkv_time_mix(
+                bp["time_mix"], h, st0, head_dim=cfg.rwkv_head_dim,
+                shard_ctx=(mesh, plan.batch_axes, plan.model_axis))
+            x = x + y
+            h = cm.rmsnorm(bp["cm_norm"], x, cfg.rms_eps)
+            h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]],
+                                     axis=1)
+            x = x + rwkv_mod.channel_mix(bp["channel_mix"], h, h_prev)
+            return x, None
+        body = _remat(block, cfg.remat_policy)
+        x, _ = jax.lax.scan(lambda c, bp: body(c, bp), x, params["blocks"])
+        aux = ForwardAux(None, jnp.zeros(()), jnp.zeros(()))
+
+    elif cfg.family is Family.HYBRID:
+        heads = cfg.ssm_heads or (2 * cfg.d_model) // 64
+
+        def mamba_block(x, bp):
+            bp = _gather_weights(bp, cs["blocks"] if cs else None)
+            h = cm.rmsnorm(bp["norm"], x, cfg.rms_eps)
+            y, _st = ssm_mod.ssm_apply(bp["ssm"], h, n_state=cfg.ssm_state,
+                                       n_heads=heads)
+            return x + y, None
+        body = _remat(mamba_block, cfg.remat_policy)
+
+        def shared_attn_block(x):
+            sp = _gather_weights(params["shared_attn"],
+                                 cs["shared_attn"] if cs else None)
+            h = cm.rmsnorm(sp["attn_norm"], x, cfg.rms_eps)
+            a, _ = attn.attn_apply(
+                sp["attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                head_dim=cfg.hd, theta=cfg.rope_theta, positions=positions,
+                window=cfg.attn_window,
+                shard_ctx=(mesh, plan.batch_axes, plan.model_axis))
+            x = x + a
+            h = cm.rmsnorm(sp["mlp_norm"], x, cfg.rms_eps)
+            return x + cm.mlp_apply(sp["mlp"], h, cfg.mlp_activation)
+        shared = _remat(shared_attn_block, cfg.remat_policy)
+
+        period = cfg.attn_every or cfg.n_layers
+        n_seg, rem = divmod(cfg.n_layers, period)
+        idx = 0
+        for _ in range(n_seg):
+            seg = jax.tree.map(lambda a: a[idx:idx + period],
+                               params["blocks"])
+            x, _ = jax.lax.scan(lambda c, bp: body(c, bp), x, seg)
+            x = shared(x)
+            idx += period
+        if rem:
+            seg = jax.tree.map(lambda a: a[idx:], params["blocks"])
+            x, _ = jax.lax.scan(lambda c, bp: body(c, bp), x, seg)
+        aux = ForwardAux(None, jnp.zeros(()), jnp.zeros(()))
+
+    else:
+        def block(x, bp):
+            bp = _gather_weights(bp, cs["blocks"] if cs else None)
+            return _dense_block(bp, x, cfg, plan, mesh, positions,
+                                lt_schedule)
+        body = _remat(block, cfg.remat_policy)
+        x, (loads, auxl, drop) = jax.lax.scan(
+            lambda c, bp: body(c, bp), x, params["blocks"])
+        aux = ForwardAux(loads if cfg.is_moe else None,
+                         jnp.mean(auxl), jnp.mean(drop))
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return x, aux
+
+
+def _head_params(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def train_loss(params, cfg: ModelConfig, plan: ShardingPlan, mesh, batch,
+               moe_aux_weight: float = 0.01, lt_schedule: bool = False):
+    """batch: {"tokens": (B,S), optional "cond_emb": (B,n_cond,d)}.
+    Next-token CE over text positions. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    cond = batch.get("cond_emb")
+    n_cond = 0 if cond is None else cond.shape[1]
+    hidden, aux = forward(params, cfg, plan, mesh, tokens, cond,
+                          lt_schedule=lt_schedule)
+    # predict tokens[:, 1:] from hidden at absolute pos n_cond .. end-1
+    h = hidden[:, n_cond:-1]
+    labels = tokens[:, 1:]
+    loss = emb.lm_head_loss(_head_params(params, cfg), h, labels,
+                            mesh=mesh, batch_axes=plan.batch_axes,
+                            model_axis=plan.model_axis,
+                            strategy=plan.head_strategy)
+    total = loss + moe_aux_weight * aux.moe_aux_loss
+    metrics = {"ce_loss": loss, "moe_aux": aux.moe_aux_loss,
+               "moe_dropped": aux.moe_dropped}
+    if aux.moe_load is not None:
+        metrics["moe_load"] = aux.moe_load
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode-state pytree for one generation session."""
+    if cfg.family is Family.SSM:
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "s": jnp.zeros((cfg.n_layers, batch, H, cfg.rwkv_head_dim,
+                            cfg.rwkv_head_dim), jnp.float32),
+            "x_prev_tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model),
+                                   cm.COMPUTE_DTYPE),
+            "x_prev_cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model),
+                                   cm.COMPUTE_DTYPE),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family is Family.HYBRID:
+        heads = cfg.ssm_heads or (2 * cfg.d_model) // 64
+        hd_i = (2 * cfg.d_model) // heads
+        n_seg = cfg.n_layers // (cfg.attn_every or cfg.n_layers)
+        return {
+            "ssm_s": jnp.zeros((cfg.n_layers, batch, heads, hd_i,
+                                cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, 2 * cfg.d_model,
+                               ssm_mod.CONV_K - 1), cm.COMPUTE_DTYPE),
+            "attn_k": jnp.zeros((n_seg, batch, max_seq, cfg.kv_heads,
+                                 cfg.hd), cm.COMPUTE_DTYPE),
+            "attn_v": jnp.zeros((n_seg, batch, max_seq, cfg.kv_heads,
+                                 cfg.hd), cm.COMPUTE_DTYPE),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.kv_heads, cfg.hd),
+                       cm.COMPUTE_DTYPE),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.kv_heads, cfg.hd),
+                       cm.COMPUTE_DTYPE),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, plan: ShardingPlan, mesh, token,
+                cache):
+    """One serve step: token (B, 1) + cache -> (logits (B, vocab), cache)."""
+    x = emb.embed_apply(params["embed"], token, mesh=mesh,
+                        batch_axes=plan.batch_axes,
+                        model_axis=plan.model_axis,
+                        strategy=plan.embed_strategy)
+    B = x.shape[0]
+    pos = cache["pos"]
+    cs = (block_compute_shardings(cfg, params, plan, mesh)
+          if mesh is not None else None)
+
+    if cfg.family is Family.SSM:
+        def step(x, inp):
+            bp, s, xtm, xcm = inp
+            bp = _gather_weights(bp, cs["blocks"] if cs else None)
+            h = cm.rmsnorm(bp["tm_norm"], x, cfg.rms_eps)
+            st = rwkv_mod.RWKVState(s, xtm)
+            y, st2 = rwkv_mod.rwkv_decode(bp["time_mix"], h, st,
+                                          head_dim=cfg.rwkv_head_dim)
+            x = x + y
+            h = cm.rmsnorm(bp["cm_norm"], x, cfg.rms_eps)
+            x = x + rwkv_mod.channel_mix(bp["channel_mix"], h,
+                                         xcm[:, None, :])
+            return x, (st2.s, st2.x_prev, h[:, 0])
+        x, (s_new, xtm_new, xcm_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["s"], cache["x_prev_tm"],
+                      cache["x_prev_cm"]))
+        new_cache = {"s": s_new, "x_prev_tm": xtm_new, "x_prev_cm": xcm_new,
+                     "pos": pos + 1}
+
+    elif cfg.family is Family.HYBRID:
+        heads = cfg.ssm_heads or (2 * cfg.d_model) // 64
+        period = cfg.attn_every or cfg.n_layers
+        n_seg, rem = divmod(cfg.n_layers, period)
+        sp = _gather_weights(params["shared_attn"],
+                             cs["shared_attn"] if cs else None)
+        new_s, new_conv = [], []
+        new_k, new_v = [], []
+        idx = 0
+        for seg_i in range(n_seg):
+            seg = jax.tree.map(lambda a: a[idx:idx + period],
+                               params["blocks"])
+
+            def mstep(x, inp):
+                bp, s, conv = inp
+                bp = _gather_weights(bp, cs["blocks"] if cs else None)
+                h = cm.rmsnorm(bp["norm"], x, cfg.rms_eps)
+                y, st = ssm_mod.ssm_decode(bp["ssm"], h, ssm_mod.SSMState(
+                    s, conv), n_state=cfg.ssm_state, n_heads=heads)
+                return x + y, (st.s, st.conv)
+            x, (s2, c2) = jax.lax.scan(
+                mstep, x, (seg, cache["ssm_s"][idx:idx + period],
+                           cache["conv"][idx:idx + period]))
+            new_s.append(s2)
+            new_conv.append(c2)
+            h = cm.rmsnorm(sp["attn_norm"], x, cfg.rms_eps)
+            a, k2, v2 = attn.attn_decode(
+                sp["attn"], h, cache["attn_k"][seg_i],
+                cache["attn_v"][seg_i], pos, n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+                theta=cfg.rope_theta, window=cfg.attn_window)
+            x = x + a
+            h = cm.rmsnorm(sp["mlp_norm"], x, cfg.rms_eps)
+            x = x + cm.mlp_apply(sp["mlp"], h, cfg.mlp_activation)
+            new_k.append(k2)
+            new_v.append(v2)
+            idx += period
+        if rem:
+            seg = jax.tree.map(lambda a: a[idx:], params["blocks"])
+
+            def mstep(x, inp):
+                bp, s, conv = inp
+                bp = _gather_weights(bp, cs["blocks"] if cs else None)
+                h = cm.rmsnorm(bp["norm"], x, cfg.rms_eps)
+                y, st = ssm_mod.ssm_decode(bp["ssm"], h, ssm_mod.SSMState(
+                    s, conv), n_state=cfg.ssm_state, n_heads=heads)
+                return x + y, (st.s, st.conv)
+            x, (s2, c2) = jax.lax.scan(
+                mstep, x, (seg, cache["ssm_s"][idx:], cache["conv"][idx:]))
+            new_s.append(s2)
+            new_conv.append(c2)
+        new_cache = {
+            "ssm_s": jnp.concatenate(new_s, axis=0),
+            "conv": jnp.concatenate(new_conv, axis=0),
+            "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+            "pos": pos + 1,
+        }
+
+    else:
+        def step(x, inp):
+            bp, k_l, v_l = inp
+            bp = _gather_weights(bp, cs["blocks"] if cs else None)
+            h = cm.rmsnorm(bp["attn_norm"], x, cfg.rms_eps)
+            a, k2, v2 = attn.attn_decode(
+                bp["attn"], h, k_l, v_l, pos, n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+                window=cfg.attn_window)
+            x = x + a
+            h = cm.rmsnorm(bp["mlp_norm"], x, cfg.rms_eps)
+            if cfg.is_moe:
+                y, _aux = moe_mod.moe_apply(
+                    bp["moe"], h, mesh=mesh, batch_axes=plan.batch_axes,
+                    model_axis=plan.model_axis, n_experts=cfg.n_experts,
+                    top_k=cfg.top_k, strategy=plan.moe_strategy)
+            else:
+                y = cm.mlp_apply(bp["mlp"], h, cfg.mlp_activation)
+            return x + y, (k2, v2)
+        x, (k_new, v_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = emb.lm_head_logits(_head_params(params, cfg), x[:, 0:1],
+                                mesh=mesh, batch_axes=plan.batch_axes,
+                                model_axis=plan.model_axis,
+                                strategy=plan.head_strategy)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, plan: ShardingPlan, mesh, tokens,
+            cond_emb=None):
+    """Full-sequence prefill returning last-position logits. (The dry-run
+    lowers this for prefill_* shapes; cache assembly for generation reuses
+    forward's per-layer KV which the serving driver manages.)"""
+    hidden, _aux = forward(params, cfg, plan, mesh, tokens, cond_emb)
+    logits = emb.lm_head_logits(_head_params(params, cfg), hidden[:, -1:],
+                                mesh=mesh, batch_axes=plan.batch_axes,
+                                model_axis=plan.model_axis,
+                                strategy=plan.head_strategy)
+    return logits[:, 0]

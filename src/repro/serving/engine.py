@@ -1,0 +1,118 @@
+"""Batched serving engine: continuous-batching decode over the model's
+cache, with RelShard stage-boundary re-planning on measured occupancy.
+
+The engine keeps one fixed-shape decode program (batch = ``max_batch``) and
+fills slots from a request queue (continuous batching). Measured occupancy
+is the adaptive runtime statistic: ``maybe_replan`` re-runs the planner
+with it (paper §4.1 re-optimization) and reports when the physical plan
+would change, letting the driver swap compiled executables at a stage
+boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.relshard import ShardingPlan, plan_model, replan
+from ..models import lm
+from ..models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, plan: ShardingPlan, mesh, params,
+                 max_batch: int = 8, max_seq: int = 512,
+                 mesh_axes=None, shape: Optional[ShapeConfig] = None):
+        self.cfg, self.plan, self.mesh, self.params = cfg, plan, mesh, params
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.mesh_axes, self.shape = mesh_axes, shape
+        self.cache = lm.init_cache(cfg, max_batch, max_seq)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, cfg, plan, mesh, t, c))
+        self.replan_events: List[str] = []
+
+    # -- queueing -------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # teacher-force the prompt through decode steps for slot i
+                # (per-slot prefill; batched prefill is the prefill_* path)
+                for tok in req.prompt[:-1]:
+                    self._step_single(i, tok)
+                req._next = req.prompt[-1]
+
+    def _step_single(self, i: int, tok: int) -> None:
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        tokens[i, 0] = tok
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+
+    # -- decode ----------------------------------------------------------------
+
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def step(self) -> Dict[int, int]:
+        """One batched decode step for all live slots. Returns {rid: token}."""
+        self._admit()
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                tokens[i, 0] = getattr(req, "_next", req.prompt[-1])
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        out = np.asarray(jnp.argmax(logits, axis=-1))
+        emitted: Dict[int, int] = {}
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(out[i])
+            req.out.append(tok)
+            req._next = tok
+            emitted[req.rid] = tok
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None
+        return emitted
+
+    # -- adaptive re-planning ----------------------------------------------------
+
+    def maybe_replan(self) -> Optional[ShardingPlan]:
+        """Paper §4.1 step 2-3 at a serving stage boundary: feed measured
+        occupancy (runtime statistic) back into the cost model. Returns the
+        new plan if any strategy changed (caller recompiles), else None."""
+        if self.mesh_axes is None or self.shape is None:
+            return None
+        new = replan(self.plan, self.cfg, self.mesh_axes, self.shape,
+                     measured_tokens=max(self.occupancy(), 1))
+        changed = (new.embed_strategy != self.plan.embed_strategy
+                   or new.head_strategy != self.plan.head_strategy
+                   or new.moe_strategy != self.plan.moe_strategy)
+        if changed:
+            self.replan_events.append(
+                f"occupancy={self.occupancy()}: "
+                f"embed {self.plan.embed_strategy}->{new.embed_strategy}, "
+                f"moe {self.plan.moe_strategy}->{new.moe_strategy}")
+            return new
+        return None

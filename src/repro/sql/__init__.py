@@ -1,0 +1,14 @@
+"""Mini SQL layer: logical plans, synthetic TPC-DS-like workload, selection
+strategies, and the adaptive stage-wise executor."""
+
+from .datagen import Catalog, generate
+from .executor import ExecutionResult, Executor, JoinDecision
+from .logical import Aggregate, Filter, Join, Node, Project, Scan
+from .queries import all_queries
+from .strategies import (AQEStrategy, ForcedStrategy, RelJoinStrategy,
+                         Strategy, default_strategies)
+
+__all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
+           "JoinDecision", "Aggregate", "Filter", "Join", "Node", "Project",
+           "Scan", "all_queries", "AQEStrategy", "ForcedStrategy",
+           "RelJoinStrategy", "Strategy", "default_strategies"]

@@ -1,0 +1,143 @@
+"""Synthetic TPC-DS-like star schema (DESIGN.md §7: same *shape* of the
+decision problem as TPC-DS — fact tables vastly larger than dimensions,
+FK->PK equi-joins, multi-join chains, skewable keys).
+
+Scale factor 1.0 ~= 100k fact rows; tables keep TPC-DS-style names so the
+query suite reads like the original workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from ..joins.table import Table, from_numpy, partition_round_robin
+
+
+@dataclasses.dataclass
+class Catalog:
+    """Named stacked tables + their (exact) base statistics."""
+
+    tables: Dict[str, Table]
+    p: int
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+
+#: (rows per unit scale, payload float columns) per table. Dimensions are
+#: sized to place joins on BOTH sides of k0: fact/item k~25d, fact/store
+#: k~2000, fact/customer k~4 etc. (with w=1,p=8 -> k0=15).
+SCHEMA = {
+    "store_sales": 100_000,     # fact
+    "catalog_sales": 60_000,    # second fact
+    "inventory": 30_000,        # medium fact
+    "customer": 12_000,         # large dim (k < k0 vs fact)
+    "item": 2_000,              # mid dim
+    "date_dim": 365,            # small dim
+    "store": 60,                # tiny dim
+    "promotion": 40,            # tiny dim
+    "warehouse": 12,            # tiny dim
+    "household": 3_000,         # mid dim
+}
+
+
+def _zipf_fks(rng, n, n_dim, skew: float):
+    """FK draws; skew=0 -> uniform, else Zipf-tilted (hot keys)."""
+    if skew <= 0:
+        return rng.integers(0, n_dim, n).astype(np.int32)
+    ranks = np.arange(1, n_dim + 1, dtype=np.float64)
+    probs = ranks ** (-skew)
+    probs /= probs.sum()
+    return rng.choice(n_dim, size=n, p=probs).astype(np.int32)
+
+
+#: Only facts scale; dimensions are fixed (TPC-DS dims grow sub-linearly,
+#: and e.g. date_dim must always cover whole years).
+FACTS = ("store_sales", "catalog_sales", "inventory")
+
+
+def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
+             skew: float = 0.0) -> Catalog:
+    rng = np.random.default_rng(seed)
+    n = {t: max(8, int(r * scale)) if t in FACTS else r
+         for t, r in SCHEMA.items()}
+
+    def dim(name, pk, extra):
+        cols = {pk: np.arange(n[name], dtype=np.int32)}
+        cols.update(extra)
+        return from_numpy(cols)
+
+    tables = {}
+    tables["customer"] = dim("customer", "c_customer_sk", {
+        "c_region": rng.integers(0, 8, n["customer"]).astype(np.int32),
+        "c_hdemo_sk": rng.integers(0, n["household"],
+                                   n["customer"]).astype(np.int32),
+        "c_income": rng.uniform(2e4, 2e5, n["customer"]).astype(np.float32),
+    })
+    tables["item"] = dim("item", "i_item_sk", {
+        "i_category": rng.integers(0, 10, n["item"]).astype(np.int32),
+        "i_brand": rng.integers(0, 100, n["item"]).astype(np.int32),
+        "i_price": rng.uniform(1, 300, n["item"]).astype(np.float32),
+    })
+    tables["date_dim"] = dim("date_dim", "d_date_sk", {
+        "d_month": (np.arange(n["date_dim"]) // 30 % 12).astype(np.int32),
+        "d_year": (2000 + np.arange(n["date_dim"]) // 365).astype(np.int32),
+        "d_moy": (np.arange(n["date_dim"]) % 30).astype(np.int32),
+    })
+    tables["store"] = dim("store", "s_store_sk", {
+        "s_state": rng.integers(0, 12, n["store"]).astype(np.int32),
+        "s_floor": rng.uniform(1e3, 1e5, n["store"]).astype(np.float32),
+    })
+    tables["promotion"] = dim("promotion", "p_promo_sk", {
+        "p_channel": rng.integers(0, 4, n["promotion"]).astype(np.int32),
+    })
+    tables["warehouse"] = dim("warehouse", "w_warehouse_sk", {
+        "w_state": rng.integers(0, 12, n["warehouse"]).astype(np.int32),
+    })
+    tables["household"] = dim("household", "hd_demo_sk", {
+        "hd_buy_potential": rng.integers(0, 6,
+                                         n["household"]).astype(np.int32),
+    })
+
+    nf = n["store_sales"]
+    tables["store_sales"] = from_numpy({
+        "ss_item_sk": _zipf_fks(rng, nf, n["item"], skew),
+        "ss_store_sk": _zipf_fks(rng, nf, n["store"], skew),
+        "ss_customer_sk": _zipf_fks(rng, nf, n["customer"], skew),
+        "ss_sold_date_sk": _zipf_fks(rng, nf, n["date_dim"], skew),
+        "ss_promo_sk": _zipf_fks(rng, nf, n["promotion"], skew),
+        "ss_quantity": rng.integers(1, 100, nf).astype(np.int32),
+        "ss_sales_price": rng.uniform(1, 300, nf).astype(np.float32),
+        "ss_net_profit": rng.uniform(-50, 150, nf).astype(np.float32),
+    })
+    nc = n["catalog_sales"]
+    tables["catalog_sales"] = from_numpy({
+        "cs_item_sk": _zipf_fks(rng, nc, n["item"], skew),
+        "cs_ship_date_sk": _zipf_fks(rng, nc, n["date_dim"], skew),
+        "cs_bill_customer_sk": _zipf_fks(rng, nc, n["customer"], skew),
+        "cs_warehouse_sk": _zipf_fks(rng, nc, n["warehouse"], skew),
+        "cs_quantity": rng.integers(1, 100, nc).astype(np.int32),
+        "cs_sales_price": rng.uniform(1, 300, nc).astype(np.float32),
+    })
+    ni = n["inventory"]
+    tables["inventory"] = from_numpy({
+        "inv_item_sk": _zipf_fks(rng, ni, n["item"], skew),
+        "inv_date_sk": _zipf_fks(rng, ni, n["date_dim"], skew),
+        "inv_warehouse_sk": _zipf_fks(rng, ni, n["warehouse"], skew),
+        "inv_quantity_on_hand": rng.integers(0, 1000, ni).astype(np.int32),
+    })
+
+    return Catalog({k: partition_round_robin(t, p)
+                    for k, t in tables.items()}, p)
+
+
+#: primary key of each dimension (build-side uniqueness contract).
+PRIMARY_KEYS = {
+    "customer": "c_customer_sk", "item": "i_item_sk",
+    "date_dim": "d_date_sk", "store": "s_store_sk",
+    "promotion": "p_promo_sk", "warehouse": "w_warehouse_sk",
+    "household": "hd_demo_sk",
+}

@@ -1,0 +1,215 @@
+"""Adaptive stage-wise plan execution (paper §4.1, Fig. 3).
+
+The executor walks the physical plan bottom-up. Every Join/Aggregate is an
+exchange boundary == query-stage barrier: its inputs are materialized, their
+*measured* (size, cardinality) become the adaptive runtime statistics, and
+the method for the join about to run is (re-)selected with those statistics
+— the paper's per-stage re-optimization (selection per join is independent,
+§4.2, so bottom-up re-selection yields the model-global optimum).
+
+``adaptive=False`` reproduces a static optimizer: selections use statistics
+propagated from base tables through operator estimation rules (optionally
+perturbed by ``est_error`` to emulate stale catalogs — the paper's §1
+motivation for adaptivity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from ..core.selection import JoinProperties, Selection
+from ..core.stats import (StatsSource, TableStats, estimate_filter,
+                          estimate_group_by, estimate_join)
+from ..joins.aggregate import group_aggregate
+from ..joins.methods import JoinReport, run_equi_join
+from ..joins.table import Table, compact_partitions
+from .datagen import Catalog
+from .logical import Aggregate, Filter, Join, Node, Project, Scan
+from .strategies import Strategy
+
+
+@dataclasses.dataclass
+class JoinDecision:
+    """Audit record of one join's selection + execution."""
+
+    selection: Selection
+    left_stats: TableStats
+    right_stats: TableStats
+    report: JoinReport
+
+    @property
+    def network_bytes(self) -> float:
+        return sum(e.network_bytes for e in self.report.exchanges)
+
+    @property
+    def local_bytes(self) -> float:
+        return self.report.local_bytes
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    table: Table
+    decisions: List[JoinDecision]
+    wall_time_s: float
+    network_bytes: float
+    local_bytes: float
+    rows: int
+
+    def methods(self):
+        return [d.selection.method for d in self.decisions]
+
+    def workload(self, w: float = 1.0) -> float:
+        """Measured cluster workload under the paper's weighting."""
+        return w * self.network_bytes + self.local_bytes
+
+
+@dataclasses.dataclass
+class _Annotated:
+    table: Table
+    measured: TableStats   # adaptive runtime statistic (post-materialization)
+    estimated: TableStats  # statically-propagated estimate
+
+
+class Executor:
+    def __init__(self, catalog: Catalog, strategy: Strategy,
+                 adaptive: bool = True, est_error: float = 1.0,
+                 use_kernel: bool = False, capacity_factor: float = 2.0,
+                 compact: bool = True):
+        self.catalog = catalog
+        self.strategy = strategy
+        self.adaptive = adaptive
+        self.est_error = est_error
+        self.use_kernel = use_kernel
+        self.capacity_factor = capacity_factor
+        self.compact = compact
+        self.p = catalog.p
+
+    # -- public ---------------------------------------------------------------
+
+    def execute(self, plan: Node) -> ExecutionResult:
+        self._decisions: List[JoinDecision] = []
+        t0 = time.perf_counter()
+        ann = self._eval(plan)
+        ann.table.valid.block_until_ready()
+        dt = time.perf_counter() - t0
+        net = sum(d.network_bytes for d in self._decisions)
+        loc = sum(d.local_bytes for d in self._decisions)
+        return ExecutionResult(ann.table, self._decisions, dt, net, loc,
+                               ann.table.count())
+
+    # -- evaluation ------------------------------------------------------------
+
+    def _eval(self, node: Node) -> _Annotated:
+        if isinstance(node, Scan):
+            t = self.catalog.table(node.table)
+            measured = t.measure()
+            est = TableStats(measured.size_bytes * self.est_error,
+                             measured.cardinality * self.est_error,
+                             StatsSource.ESTIMATED)
+            return _Annotated(t, measured, est)
+
+        if isinstance(node, Filter):
+            child = self._eval(node.child)
+            t = _apply_filter(child.table, node)
+            # In-stage operator: runtime stats are *propagated estimates*
+            # from the last materialization (paper §4.1 step 2).
+            measured = estimate_filter(child.measured, node.selectivity)
+            est = estimate_filter(child.estimated, node.selectivity)
+            return _Annotated(t, measured, est)
+
+        if isinstance(node, Project):
+            child = self._eval(node.child)
+            t = child.table.select(node.columns)
+            frac = t.row_bytes / max(child.table.row_bytes, 1)
+            m, e = child.measured, child.estimated
+            return _Annotated(
+                t,
+                TableStats(m.size_bytes * frac, m.cardinality, m.source),
+                TableStats(e.size_bytes * frac, e.cardinality, e.source))
+
+        if isinstance(node, Join):
+            left = self._eval(node.left)
+            right = self._eval(node.right)
+            # Exchange boundary: re-measure both inputs (adaptive runtime
+            # statistics). Non-adaptive mode keeps static estimates.
+            lstats = self._boundary_stats(left, node.left)
+            rstats = self._boundary_stats(right, node.right)
+            props = JoinProperties(join_type=node.join_type, hint=node.hint)
+            sel = self.strategy.select(lstats, rstats, props, self.p)
+            jt = {"inner": "inner"}.get(node.join_type.value,
+                                        node.join_type.value)
+            out, rep = self._run_join_with_retry(
+                sel, left.table, right.table, node.left_key, node.right_key,
+                jt)
+            if self.compact:
+                out = compact_partitions(out)
+            self._decisions.append(JoinDecision(sel, lstats, rstats, rep))
+            measured = out.measure()
+            est = estimate_join(left.estimated, right.estimated)
+            return _Annotated(out, measured, est)
+
+        if isinstance(node, Aggregate):
+            child = self._eval(node.child)
+            out, _rep = self._run_agg_with_retry(child.table, node.key,
+                                                 node.aggs)
+            if self.compact:
+                out = compact_partitions(out)
+            measured = out.measure()
+            est = estimate_group_by(child.estimated,
+                                    measured.cardinality or 1)
+            return _Annotated(out, measured, est)
+
+        raise TypeError(f"unknown plan node {type(node)}")
+
+    def _run_join_with_retry(self, sel, left, right, lk, rk, jt):
+        """Skew mitigation: double slot capacity until no overflow (the
+        engine-level straggler guard; DESIGN.md scale-out design)."""
+        factor = self.capacity_factor
+        for _ in range(4):
+            out, rep = run_equi_join(sel.method, left, right, lk, rk,
+                                     join_type=jt, use_kernel=self.use_kernel,
+                                     capacity_factor=factor)
+            if all(e.overflow_rows == 0 for e in rep.exchanges):
+                return out, rep
+            factor *= 2 * max(self.p // 2, 1)
+        raise RuntimeError("shuffle overflow persisted after capacity retries")
+
+    def _run_agg_with_retry(self, table, key, aggs):
+        factor = self.capacity_factor
+        for _ in range(4):
+            out, rep = group_aggregate(table, key, aggs, factor)
+            if rep.overflow_rows == 0:
+                return out, rep
+            factor *= 2 * max(self.p // 2, 1)
+        raise RuntimeError("aggregate overflow persisted after retries")
+
+    def _boundary_stats(self, ann: _Annotated, node: Node) -> TableStats:
+        if not self.adaptive:
+            return ann.estimated
+        # Post-exchange children were just materialized: exact runtime stats.
+        if isinstance(node, (Join, Aggregate, Scan)):
+            return ann.table.measure()
+        return ann.measured
+
+
+def _apply_filter(table: Table, f: Filter) -> Table:
+    c = table.column(f.column)
+    if f.op == "eq":
+        m = c == f.value
+    elif f.op == "lt":
+        m = c < f.value
+    elif f.op == "le":
+        m = c <= f.value
+    elif f.op == "gt":
+        m = c > f.value
+    elif f.op == "ge":
+        m = c >= f.value
+    elif f.op == "between":
+        m = (c >= f.value) & (c <= f.value2)
+    else:
+        raise ValueError(f"unknown filter op {f.op}")
+    return table.with_valid(table.valid & m)

@@ -1,0 +1,84 @@
+"""Logical query plans (paper §2.2): operator trees that determine the
+result but not the physical methods. Joins and aggregations are the
+exchange boundaries that split the plan into query stages (§2.3)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+from ..core.cost_model import JoinMethod
+from ..core.selection import JoinType
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """Base logical operator."""
+
+    def children(self) -> tuple:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan(Node):
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter(Node):
+    child: Node
+    column: str
+    op: str            # "eq" | "lt" | "le" | "gt" | "ge" | "between"
+    value: float
+    value2: float = 0.0
+    selectivity: float = 0.5  # static estimate used when stats are projected
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Project(Node):
+    child: Node
+    columns: Tuple[str, ...]
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(Node):
+    """Logical equi-join; left is the plan-order probe side."""
+
+    left: Node
+    right: Node
+    left_key: str
+    right_key: str
+    join_type: JoinType = JoinType.INNER
+    hint: Optional[JoinMethod] = None
+
+    def children(self):
+        return (self.left, self.right)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate(Node):
+    """Group-by aggregation (an exchange boundary, like Join)."""
+
+    child: Node
+    key: str                              # group key column
+    aggs: Tuple[Tuple[str, str], ...]     # (column, op) pairs
+
+    def children(self):
+        return (self.child,)
+
+
+def count_joins(plan: Node) -> int:
+    n = 1 if isinstance(plan, Join) else 0
+    return n + sum(count_joins(c) for c in plan.children())
+
+
+def walk(plan: Node):
+    yield plan
+    for c in plan.children():
+        yield from walk(c)

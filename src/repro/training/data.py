@@ -1,0 +1,46 @@
+"""Deterministic synthetic token pipeline.
+
+Stateless step->batch mapping: ``batch_for_step(step)`` is a pure function
+of (seed, step), so a restarted job replays the exact token stream — the
+property checkpoint/restart correctness depends on (DESIGN.md scale-out).
+Tokens follow a Zipfian unigram draw with a shifted-window structure so the
+loss actually decreases (next-token has mutual information with context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_cond_tokens: int = 0
+    d_model: int = 0  # for cond_emb stubs
+
+
+def batch_for_step(cfg: DataConfig, step: int):
+    """Pure (seed, step) -> batch. jit-able; host calls it per step."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    # Zipf-ish unigram via exponential transform of uniforms.
+    u = jax.random.uniform(k1, (cfg.global_batch, cfg.seq_len),
+                           minval=1e-6, maxval=1.0)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(cfg.vocab)))) - 1
+    base = ranks.astype(jnp.int32) % cfg.vocab
+    # structure: every other token repeats its predecessor + 1 (learnable)
+    shifted = jnp.roll(base, 1, axis=1)
+    alt = (jnp.arange(cfg.seq_len) % 2).astype(jnp.int32)[None, :]
+    tokens = jnp.where(alt == 1, (shifted + 1) % cfg.vocab, base)
+    batch = {"tokens": tokens}
+    if cfg.n_cond_tokens:
+        batch["cond_emb"] = 0.02 * jax.random.normal(
+            k2, (cfg.global_batch, cfg.n_cond_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return batch

@@ -1,0 +1,122 @@
+"""Training step factory + host loop with checkpoint/restart.
+
+``make_train_step`` builds the jit'd (params, opt_state, batch) -> (params,
+opt_state, metrics) step with explicit in/out shardings from the RelShard
+plan — the same callable the multi-pod dry-run lowers with
+ShapeDtypeStructs. The host loop adds fault tolerance: periodic atomic
+checkpoints, resume-from-latest, and deterministic data replay.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core.relshard import ShardingPlan
+from ..models import lm
+from ..models.config import ModelConfig
+from . import checkpoint as ckpt_mod
+from .data import DataConfig, batch_for_step
+from .optimizer import OptConfig, apply_updates, init_opt_state, \
+    opt_state_specs
+
+
+def batch_specs(plan: ShardingPlan, has_cond: bool):
+    spec = {"tokens": P(plan.batch_axes)}
+    if has_cond:
+        spec["cond_emb"] = P(plan.batch_axes)
+    return spec
+
+
+def make_train_step(cfg: ModelConfig, plan: ShardingPlan, mesh,
+                    opt_cfg: OptConfig, lt_schedule: bool = False):
+    """Returns the pure train_step function (to be jit'd by the caller with
+    the sharding trees from ``sharding_trees``)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = lm.train_loss(p, cfg, plan, mesh, batch,
+                                          lt_schedule=lt_schedule)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(params)
+        params2, opt2, opt_metrics = apply_updates(opt_cfg, params,
+                                                   opt_state, grads)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def sharding_trees(cfg: ModelConfig, plan: ShardingPlan, mesh,
+                   opt_cfg: OptConfig, params_shape):
+    """NamedSharding pytrees for params / opt state (jit in_shardings)."""
+    specs = lm.param_specs(cfg, params_shape, plan)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    o_specs = opt_state_specs(opt_cfg, specs)
+    o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    return p_sh, o_sh, specs
+
+
+def train(cfg: ModelConfig, plan: ShardingPlan, mesh, *,
+          steps: int, global_batch: int, seq_len: int,
+          opt_cfg: Optional[OptConfig] = None, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 100, resume: bool = True, log_every: int = 10,
+          seed: int = 0) -> Dict[str, Any]:
+    """Host training loop (used by examples + launch/train.py)."""
+    opt_cfg = opt_cfg or OptConfig(name=cfg.optimizer)
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(cfg, key)
+    opt_state = init_opt_state(opt_cfg, params)
+    data_cfg = DataConfig(cfg.vocab, seq_len, global_batch, seed,
+                          cfg.n_cond_tokens, cfg.d_model)
+
+    start = 0
+    if ckpt_dir and resume:
+        last = ckpt_mod.latest_step(ckpt_dir)
+        if last is not None:
+            state, _ = ckpt_mod.restore(ckpt_dir, last,
+                                        {"params": params,
+                                         "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    step_fn = make_train_step(cfg, plan, mesh, opt_cfg)
+    if mesh is not None:
+        p_sh, o_sh, _ = sharding_trees(cfg, plan, mesh, opt_cfg, params)
+        b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            batch_specs(plan, cfg.n_cond_tokens > 0),
+                            is_leaf=lambda s: isinstance(s, P))
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        batch = batch_for_step(data_cfg, step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"({dt:.1f}s)", flush=True)
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt_mod.save(ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state},
+                          extra={"arch": cfg.name})
+    return {"params": params, "opt_state": opt_state, "history": history}

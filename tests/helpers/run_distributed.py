@@ -1,0 +1,48 @@
+"""Subprocess helper: validates the shard_map join executor on 8 placeholder
+host devices (run by tests/test_distributed_join.py). Exits non-zero on any
+mismatch with the numpy oracle."""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.joins import from_numpy, partition_round_robin  # noqa: E402
+from repro.joins.distributed import (dist_broadcast_hash_join,  # noqa: E402
+                                     dist_shuffle_hash_join,
+                                     dist_shuffle_sort_join, make_join_mesh,
+                                     place)
+from repro.joins.ref import ref_equi_join, rows_as_set  # noqa: E402
+
+
+def main() -> None:
+    assert jax.device_count() == 8, jax.devices()
+    mesh = make_join_mesh(8)
+    rng = np.random.default_rng(7)
+
+    nb, na = 64, 1000
+    b = from_numpy({"k": rng.permutation(nb).astype(np.int32),
+                    "payload": rng.integers(0, 99, nb).astype(np.int32)})
+    a = from_numpy({"k": rng.integers(0, nb * 2, na).astype(np.int32),
+                    "v": rng.uniform(0, 1, na).astype(np.float32)})
+    A = place(partition_round_robin(a, 8), mesh)
+    B = place(partition_round_robin(b, 8), mesh)
+
+    want = rows_as_set(ref_equi_join(a.to_numpy(), b.to_numpy(), "k", "k"))
+    for name, fn in [("shuffle_hash", dist_shuffle_hash_join),
+                     ("shuffle_sort", dist_shuffle_sort_join),
+                     ("broadcast_hash", dist_broadcast_hash_join)]:
+        if name == "broadcast_hash":
+            out = fn(A, B, "k", "k", mesh)
+        else:
+            out = fn(A, B, "k", "k", mesh)
+        got = rows_as_set(out.to_numpy())
+        assert got == want, f"{name}: {len(got)} rows vs oracle {len(want)}"
+        print(f"{name}: OK ({len(got)} rows, 8 devices)")
+    print("DISTRIBUTED_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Unit + property tests for the RelJoin cost model (paper §3)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import CostParams, JoinMethod
+
+MB = 2 ** 20
+
+
+def test_k0_matches_paper_testbed():
+    # Paper Table 3: w=1 and hence k0=39 (p=20).
+    assert cm.k0_threshold(CostParams(p=20, w=1.0)) == pytest.approx(39.0)
+
+
+def test_paper_q39b_example():
+    # §5.2: join with |A|~40MB, |B|~0.13MB -> C_bh = 45.2MB, C_ss = 78.4MB.
+    params = CostParams(p=20, w=1.0)
+    c_bh = cm.broadcast_hash_cost(40 * MB, 0.13 * MB, params)
+    assert c_bh / MB == pytest.approx(45.2, rel=0.01)
+    # The C_ss figure implies the aggregated intermediate had a ~= p rows
+    # (log term ~ 0); Eq. 8 then gives 78.25MB ~= the paper's 78.4MB.
+    c_ss = cm.shuffle_sort_cost(40 * MB, 0.13 * MB, 20, 20, params)
+    assert c_ss / MB == pytest.approx(78.4, rel=0.01)
+
+
+def test_eq4_expansion():
+    # C_broadcastHash = w*C_broadcast + C_build + C_probe.
+    params = CostParams(p=7, w=2.5)
+    sa, sb = 1000.0, 300.0
+    lhs = cm.broadcast_hash_cost(sa, sb, params)
+    rhs = (params.w * cm.broadcast_workload(sb, params)
+           + cm.build_workload_broadcast(sb, params)
+           + cm.probe_workload(sa, sb, 100, 30))
+    assert lhs == pytest.approx(rhs)
+
+
+def test_eq10_expansion():
+    params = CostParams(p=7, w=2.5)
+    sa, sb = 1000.0, 300.0
+    lhs = cm.shuffle_hash_cost(sa, sb, params)
+    rhs = (params.w * cm.shuffle_workload(sa, sb, params)
+           + cm.build_workload_shuffle(sb)
+           + cm.probe_workload(sa, sb, 100, 30))
+    assert lhs == pytest.approx(rhs)
+
+
+def test_eq8_expansion():
+    params = CostParams(p=7, w=2.5)
+    sa, sb, ca, cb = 1000.0, 300.0, 7000.0, 1400.0
+    lhs = cm.shuffle_sort_cost(sa, sb, ca, cb, params)
+    rhs = (params.w * cm.shuffle_workload(sa, sb, params)
+           + cm.sort_workload(sa, sb, ca, cb, params)
+           + cm.merge_workload(sa, sb))
+    assert lhs == pytest.approx(rhs)
+
+
+def test_probe_best_and_worst_case():
+    # §3.2.3: l_fan=0 -> |A| ; l_fan=b -> |A| + a|B|.
+    sa, sb, a, b = 100.0, 50.0, 10.0, 5.0
+    assert cm.probe_workload(sa, sb, a, b, l_fan=0.0) == sa
+    assert cm.probe_workload(sa, sb, a, b, l_fan=b) == sa + a * sb
+
+
+sizes = st.floats(min_value=1.0, max_value=1e12, allow_nan=False)
+cards = st.floats(min_value=1.0, max_value=1e10, allow_nan=False)
+ps = st.integers(min_value=2, max_value=4096)
+ws = st.floats(min_value=1e-5, max_value=1e5, allow_nan=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(sb=sizes, ca=cards, cb=cards, p=ps, w=ws, k=st.floats(1.0, 1e6))
+def test_threshold_consistent_with_costs(sb, ca, cb, p, w, k):
+    """Eq. 13 must agree with the raw Eq. 4 / Eq. 10 comparison everywhere."""
+    params = CostParams(p=p, w=w)
+    sa = k * sb
+    bh = cm.broadcast_hash_cost(sa, sb, params)
+    sh = cm.shuffle_hash_cost(sa, sb, params)
+    k0 = cm.k0_threshold(params)
+    if k > k0 * (1 + 1e-9):
+        assert bh < sh
+    elif k < k0 * (1 - 1e-9):
+        assert bh >= sh
+
+
+@settings(max_examples=200, deadline=None)
+@given(sa=sizes, sb=sizes, ca=cards, cb=cards, p=ps, w=ws)
+def test_hash_never_worse_than_sort(sa, sb, ca, cb, p, w):
+    """§3.6.1: C'_build + C_probe < C_sort + C_merge under the paper's
+    a, b >> p assumption (partitions hold at least a few rows), so shuffle
+    hash <= shuffle sort."""
+    params = CostParams(p=p, w=w)
+    if ca < 2 * p or cb < 2 * p:  # paper's problem setting: a >> p, b >> p
+        return
+    assert (cm.shuffle_hash_cost(sa, sb, params)
+            <= cm.shuffle_sort_cost(sa, sb, ca, cb, params) + 1e-6)
+
+
+@settings(max_examples=200, deadline=None)
+@given(sa=sizes, sb=sizes, p=ps, w=ws,
+       ca=st.floats(min_value=1e4, max_value=1e10),
+       cb=st.floats(min_value=1e4, max_value=1e10))
+def test_nl_family_dominated(sa, sb, ca, cb, p, w):
+    """§3.5: with a >> p, NL joins are strictly worse than hash twins."""
+    if ca < 100 * p:  # paper assumption a >> p
+        return
+    params = CostParams(p=p, w=w)
+    assert (cm.broadcast_nl_cost(sa, sb, ca, params)
+            > cm.broadcast_hash_cost(sa, sb, params))
+    assert (cm.cartesian_cost(sa, sb, ca, params)
+            > cm.shuffle_hash_cost(sa, sb, params))
+
+
+@settings(max_examples=100, deadline=None)
+@given(sa=sizes, sb=sizes, ca=cards, cb=cards, p=ps, w=ws)
+def test_costs_positive_and_monotone_in_sizes(sa, sb, ca, cb, p, w):
+    params = CostParams(p=p, w=w)
+    for m in JoinMethod:
+        c = cm.method_cost(m, sa, sb, ca, cb, params)
+        c2 = cm.method_cost(m, sa * 2, sb, ca, cb, params)
+        assert c > 0 and math.isfinite(c)
+        assert c2 >= c
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=ps, w=ws)
+def test_k0_increases_with_p(p, w):
+    """§3.6.2: larger parallelism -> broadcasting costs more -> higher k0."""
+    k1 = cm.k0_threshold(CostParams(p=p, w=w))
+    k2 = cm.k0_threshold(CostParams(p=p + 1, w=w))
+    assert k2 > k1
+
+
+def test_invalid_params_rejected():
+    with pytest.raises(ValueError):
+        CostParams(p=0)
+    with pytest.raises(ValueError):
+        CostParams(p=4, w=-1.0)

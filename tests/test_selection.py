@@ -1,0 +1,142 @@
+"""Tests for Algorithm 1 selection + baseline strategies + PSTS."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AQE_BROADCAST_THRESHOLD_BYTES, CostParams, JoinMethod,
+                        JoinProperties, JoinType, TableStats, compute_psts,
+                        k0_threshold, select_absolute_size, select_forced,
+                        select_join_method, selections_differ, unknown_stats)
+
+MB = 2 ** 20
+P = CostParams(p=20, w=1.0)  # paper testbed: k0 = 39
+
+
+def _stats(size_mb, card=None):
+    return TableStats(size_mb * MB, card if card is not None else size_mb * 1e4)
+
+
+def test_hint_short_circuits():
+    props = JoinProperties(hint=JoinMethod.SHUFFLE_SORT)
+    sel = select_join_method(_stats(1000), _stats(1), props, P)
+    assert sel.method is JoinMethod.SHUFFLE_SORT
+    assert sel.reason == "user hint"
+
+
+def test_relative_size_criterion():
+    # k = 100 > k0 = 39 -> broadcast; k = 10 < 39 -> shuffle hash.
+    sel = select_join_method(_stats(100), _stats(1), JoinProperties(), P)
+    assert sel.method is JoinMethod.BROADCAST_HASH
+    sel = select_join_method(_stats(10), _stats(1), JoinProperties(), P)
+    assert sel.method is JoinMethod.SHUFFLE_HASH
+
+
+def test_sides_swapped_when_right_larger():
+    sel = select_join_method(_stats(1), _stats(100), JoinProperties(), P)
+    assert sel.method is JoinMethod.BROADCAST_HASH
+    assert sel.swapped_sides
+
+
+def test_not_hashable_falls_to_sort():
+    props = JoinProperties(hashable=False)
+    sel = select_join_method(_stats(100), _stats(1), props, P)
+    assert sel.method is JoinMethod.SHUFFLE_SORT
+
+
+def test_non_equi_inner_prefers_cartesian():
+    props = JoinProperties(equi=False, join_type=JoinType.INNER)
+    sel = select_join_method(_stats(100, card=1e6), _stats(1, card=1e4),
+                             props, P)
+    # C_cartesian <= C_broadcastNL for a >> p.
+    assert sel.method is JoinMethod.CARTESIAN
+
+
+def test_non_equi_outer_requires_broadcast_nl():
+    props = JoinProperties(equi=False, join_type=JoinType.FULL_OUTER)
+    sel = select_join_method(_stats(100, card=1e6), _stats(1, card=1e4),
+                             props, P)
+    assert sel.method is JoinMethod.BROADCAST_NL
+
+
+def test_invalid_stats_fall_back_to_absolute_size():
+    sel = select_join_method(unknown_stats(), _stats(1), JoinProperties(), P)
+    assert sel.used_fallback
+    # AQE fallback: 1MB side would broadcast, but the unknown side dominates
+    # role assignment; min side is 1MB <= 10MB -> broadcast under AQE rule.
+    assert sel.method in (JoinMethod.BROADCAST_HASH, JoinMethod.SHUFFLE_SORT)
+
+
+def test_watermark_gates_validity():
+    huge = TableStats(200 * 1024 ** 3, 1e9)  # 200 GB > 100 GB watermark
+    sel = select_join_method(huge, _stats(1), JoinProperties(), P)
+    assert sel.used_fallback
+
+
+def test_aqe_absolute_size_behaviour():
+    # 1.10MB < 10MB threshold -> AQE broadcasts even when k < k0 (paper §5.4).
+    left, right = _stats(5.0), _stats(1.10)
+    aqe = select_absolute_size(left, right, JoinProperties())
+    rel = select_join_method(left, right, JoinProperties(), P)
+    assert aqe.method is JoinMethod.BROADCAST_HASH
+    assert rel.method is JoinMethod.SHUFFLE_HASH  # k = 4.5 < 39
+    assert selections_differ(aqe.method, rel.method)
+
+
+def test_aqe_large_tables_sort():
+    sel = select_absolute_size(_stats(100), _stats(50), JoinProperties())
+    assert sel.method is JoinMethod.SHUFFLE_SORT
+
+
+def test_forced_strategies():
+    sel = select_forced(JoinMethod.SHUFFLE_SORT, _stats(10), _stats(1),
+                        JoinProperties())
+    assert sel.method is JoinMethod.SHUFFLE_SORT
+    sel = select_forced(JoinMethod.SHUFFLE_HASH, _stats(10), _stats(1),
+                        JoinProperties(hashable=False))
+    assert sel.method is JoinMethod.SHUFFLE_SORT  # degrade like Alg. 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(sa=st.floats(1e3, 1e11), sb=st.floats(1e3, 1e11),
+       p=st.integers(2, 1024), w=st.floats(1e-3, 1e3))
+def test_selection_matches_k0_rule(sa, sb, p, w):
+    """For plain equi-joins Algorithm 1 must reduce to the Eq. 13 rule."""
+    params = CostParams(p=p, w=w)
+    big, small = max(sa, sb), min(sa, sb)
+    sel = select_join_method(TableStats(sa, 1e6), TableStats(sb, 1e5),
+                             JoinProperties(), params)
+    k = big / small
+    k0 = k0_threshold(params)
+    if abs(k - k0) / k0 > 1e-6:
+        expect = (JoinMethod.BROADCAST_HASH if k > k0
+                  else JoinMethod.SHUFFLE_HASH)
+        assert sel.method is expect
+
+
+def test_psts_paper_structure():
+    # 66 of 629 differ; strategy saves 419.9s of 2019s baseline -> PSTS ~1.98.
+    n = 629
+    base = [JoinMethod.BROADCAST_HASH] * n
+    strat = list(base)
+    for i in range(66):
+        strat[i] = JoinMethod.SHUFFLE_HASH
+    baseline_time = 419.9 / 0.208  # 20.8% reduction
+    rep = compute_psts(strat, base, baseline_time - 419.9, baseline_time)
+    assert rep.n_join_diff == 66
+    assert rep.pct_join_diff == pytest.approx(10.5, abs=0.1)
+    assert rep.pct_time_diff == pytest.approx(20.8, abs=0.1)
+    assert rep.psts == pytest.approx(1.98, abs=0.02)
+
+
+def test_psts_zero_when_identical():
+    ms = [JoinMethod.SHUFFLE_HASH] * 5
+    rep = compute_psts(ms, ms, 10.0, 10.0)
+    assert rep.psts == 0.0 and rep.n_join_diff == 0
+
+
+def test_shuffle_variants_not_counted_as_diff():
+    assert not selections_differ(JoinMethod.SHUFFLE_SORT,
+                                 JoinMethod.SHUFFLE_HASH)
+    assert selections_differ(JoinMethod.BROADCAST_HASH,
+                             JoinMethod.SHUFFLE_HASH)

@@ -1,0 +1,65 @@
+"""Serving engine tests: continuous batching, request lifecycle, and the
+adaptive re-planning hook."""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.relshard import plan_model
+from repro.models import lm
+from repro.models.config import ShapeConfig
+from repro.serving.engine import Request, ServeEngine
+
+MESH1 = (("data", 1), ("model", 1))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = dataclasses.replace(get_smoke_config("tinyllama_1_1b"),
+                              n_layers=2, d_model=64, d_ff=128, vocab=128)
+    shape = ShapeConfig("serve", 64, 4, "decode")
+    plan = plan_model(cfg, MESH1, shape, fsdp=False)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(cfg, plan, None, params, max_batch=4, max_seq=64,
+                       mesh_axes=MESH1, shape=shape)
+
+
+def test_requests_complete(engine):
+    for rid in range(6):
+        engine.submit(Request(rid, prompt=[1 + rid, 2], max_new_tokens=5))
+    reqs = list(engine.queue)
+    steps = 0
+    while (engine.queue or engine.occupancy()) and steps < 500:
+        engine.step()
+        steps += 1
+    assert steps < 500
+    for r in reqs:
+        assert r.done and len(r.out) == 5
+        assert all(0 <= t < 128 for t in r.out)
+
+
+def test_continuous_batching_overlaps(engine):
+    """More requests than slots: the engine must interleave, never exceed
+    max_batch occupancy, and still finish everything."""
+    reqs = [Request(100 + i, prompt=[3, 4], max_new_tokens=3)
+            for i in range(9)]
+    for r in reqs:
+        engine.submit(r)
+    max_occ = 0
+    steps = 0
+    while (engine.queue or engine.occupancy()) and steps < 500:
+        engine.step()
+        max_occ = max(max_occ, engine.occupancy())
+        steps += 1
+    assert max_occ <= 4
+    assert all(r.done for r in reqs)
+
+
+def test_maybe_replan_returns_plan_or_none(engine):
+    engine.submit(Request(999, prompt=[5], max_new_tokens=2))
+    engine.step()
+    out = engine.maybe_replan()
+    assert out is None or out.embed_strategy in ("replicate",
+                                                 "vocab_parallel")

@@ -1,0 +1,134 @@
+"""Training substrate tests: loss decreases, checkpoint/restart determinism,
+elastic re-sharding, optimizer correctness, data pipeline determinism."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.relshard import plan_model
+from repro.launch.mesh import make_host_mesh, mesh_axes
+from repro.models import lm
+from repro.models.config import ShapeConfig
+from repro.training import checkpoint as ck
+from repro.training.data import DataConfig, batch_for_step
+from repro.training.optimizer import (OptConfig, apply_updates,
+                                      init_opt_state)
+from repro.training.train_loop import train
+
+SHAPE = ShapeConfig("t", 64, 4, "train")
+MESH1 = (("data", 1), ("model", 1))
+
+
+def small_cfg():
+    return dataclasses.replace(get_smoke_config("tinyllama_1_1b"),
+                               n_layers=2, d_model=64, d_ff=128, vocab=256)
+
+
+def test_loss_decreases():
+    cfg = small_cfg()
+    plan = plan_model(cfg, MESH1, SHAPE, fsdp=False)
+    out = train(cfg, plan, None, steps=40, global_batch=4, seq_len=64,
+                opt_cfg=OptConfig(lr=2e-3, warmup_steps=5), log_every=5)
+    hist = out["history"]
+    assert hist[-1][1] < hist[0][1] - 0.3, hist
+
+
+def test_data_pipeline_deterministic():
+    dc = DataConfig(vocab=256, seq_len=32, global_batch=4, seed=3)
+    b1 = batch_for_step(dc, 7)
+    b2 = batch_for_step(dc, 7)
+    b3 = batch_for_step(dc, 8)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Kill-and-restart must reproduce the exact same training state."""
+    cfg = small_cfg()
+    plan = plan_model(cfg, MESH1, SHAPE, fsdp=False)
+    opt = OptConfig(lr=1e-3, warmup_steps=5)
+    d = str(tmp_path / "ck")
+    # run 20 steps with a checkpoint at 10
+    full = train(cfg, plan, None, steps=20, global_batch=4, seq_len=64,
+                 opt_cfg=opt, ckpt_dir=d, ckpt_every=10, resume=False,
+                 log_every=100)
+    # fresh process-equivalent: resume from step 10 and run to 20
+    resumed = train(cfg, plan, None, steps=20, global_batch=4, seq_len=64,
+                    opt_cfg=opt, ckpt_dir=d, ckpt_every=100, resume=True,
+                    log_every=100)
+    for a, b in zip(jax.tree.leaves(full["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written checkpoint directory must never be selected."""
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_00000009"))  # no manifest => ignored
+    tree = {"a": jnp.ones((3,)), "b": {"c": jnp.zeros((2, 2))}}
+    ck.save(d, 5, tree)
+    assert ck.latest_step(d) == 5
+    restored, _ = ck.restore(d, 5, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(3))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ck")
+    ck.save(d, 1, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        ck.restore(d, 1, {"a": jnp.ones((4,))})
+
+
+def test_elastic_resharding(tmp_path):
+    """Save on one mesh, restore onto a different mesh (elastic scaling)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ck")
+    arr = jnp.arange(16.0).reshape(4, 4)
+    ck.save(d, 1, {"w": arr})
+    mesh = make_host_mesh(1, 1)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = ck.restore(d, 1, {"w": arr}, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(arr))
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_adamw_reduces_loss_on_quadratic():
+    opt = OptConfig(lr=0.1, warmup_steps=1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(opt, params)
+    for _ in range(100):
+        g = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, state, _ = apply_updates(opt, params, state, g)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_adafactor_state_is_factored():
+    opt = OptConfig(name="adafactor", lr=0.01)
+    params = {"w": jnp.ones((8, 16)), "b": jnp.ones((16,))}
+    state = init_opt_state(opt, params)
+    assert state["fact"]["w"]["vr"].shape == (8,)
+    assert state["fact"]["w"]["vc"].shape == (16,)
+    assert state["fact"]["b"]["v"].shape == (16,)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, s2, _ = apply_updates(opt, params, state, g)
+    assert float(p2["w"][0, 0]) < 1.0
+
+
+def test_grad_compression_flag():
+    opt = OptConfig(lr=0.01, grad_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    state = init_opt_state(opt, params)
+    g = {"w": jnp.full((4, 4), 0.137)}
+    p2, _, m = apply_updates(opt, params, state, g)
+    assert np.isfinite(float(m["grad_norm"]))
+    assert float(p2["w"][0, 0]) < 1.0
