@@ -1,0 +1,72 @@
+"""Join-reordering benchmark: modeled and measured deltas from plan-space
+search (planner.py) on top of every selection strategy.
+
+Reported per query:
+  * modeled workload (Eq. 4/8/10 sum) of the written order vs the System-R
+    DP order — the planner's predicted win,
+  * executed network bytes and total measured workload ± reordering.
+
+Paper-claim checks: the DP order is never modeled worse than the written
+order (the planner keeps plan order otherwise), the mis-ordered queries
+(q13-q15) see large wins, and suite-total network bytes do not regress."""
+
+from __future__ import annotations
+
+from repro.sql import (Executor, ReorderingStrategy, default_strategies,
+                       every_query, generate, misordered_queries, optimize)
+
+from .common import emit, mean
+
+
+def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
+    catalog = generate(scale=scale, p=p, seed=0)
+    queries = every_query()
+
+    # -- modeled deltas (static planner, exact base stats) ------------------
+    for qname, plan in queries.items():
+        res = optimize(plan, catalog)
+        if not res.regions:
+            continue
+        ratio = res.chosen_cost / max(res.plan_order_cost, 1.0)
+        emit(f"reorder/modeled/{qname}", 0.0,
+             f"plan_MB={res.plan_order_cost / 2 ** 20:.3f};"
+             f"dp_MB={res.chosen_cost / 2 ** 20:.3f};"
+             f"ratio={ratio:.3f};reordered={int(res.reordered)}")
+
+    # -- measured deltas per strategy ---------------------------------------
+    rows = []
+    for strat in default_strategies(w=w):
+        for qname, plan in queries.items():
+            base = Executor(catalog, strat).execute(plan)
+            reord = Executor(catalog, ReorderingStrategy(strat, w=w)
+                             ).execute(plan)
+            rows.append((strat.name, qname, base, reord))
+            emit(f"reorder/measured/{strat.name}/{qname}",
+                 reord.wall_time_s * 1e6,
+                 f"net_KB={base.network_bytes / 1024:.1f}"
+                 f"->{reord.network_bytes / 1024:.1f};"
+                 f"work_KB={base.workload(w) / 1024:.1f}"
+                 f"->{reord.workload(w) / 1024:.1f}")
+
+    # -- claim checks -------------------------------------------------------
+    for strat in default_strategies(w=w):
+        mine = [r for r in rows if r[0] == strat.name]
+        net_base = sum(r[2].network_bytes for r in mine)
+        net_re = sum(r[3].network_bytes for r in mine)
+        work_base = sum(r[2].workload(w) for r in mine)
+        work_re = sum(r[3].workload(w) for r in mine)
+        emit(f"reorder/claim/{strat.name}/suite_totals", 0.0,
+             f"net_ratio={net_re / max(net_base, 1):.3f};"
+             f"work_ratio={work_re / max(work_base, 1):.3f};expect<=1")
+    mis = [r for r in rows if r[1] in misordered_queries()
+           and r[0].startswith("RelJoin")]
+    if mis:
+        gains = [r[2].network_bytes / max(r[3].network_bytes, 1.0)
+                 for r in mis]
+        emit("reorder/claim/misordered_net_gain", 0.0,
+             f"mean_x={mean(gains):.2f};expect>1")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,16 +9,22 @@ from __future__ import annotations
 
 import statistics
 
-from repro.sql import default_strategies, generate
+from repro.sql import ReorderingStrategy, default_strategies, generate
 
 from .common import emit, mean, run_suite
 
 
-def run(scales=(0.2, 0.5), p: int = 8, runs: int = 2):
+def run(scales=(0.2, 0.5), p: int = 8, runs: int = 2,
+        reorder: bool = False):
+    """``reorder=True`` wraps every baseline in ReorderingStrategy so the
+    whole comparison also exercises plan-space search (bench_reorder holds
+    the direct ± comparison)."""
     rows = []
     for scale in scales:
         catalog = generate(scale=scale, p=p, seed=0)
         for strat in default_strategies():
+            if reorder:
+                strat = ReorderingStrategy(strat)
             suite = run_suite(catalog, strat, runs=runs)
             walls = [r["wall_s"] for r in suite.values()]
             works = [r["workload"] for r in suite.values()]
@@ -33,10 +39,11 @@ def run(scales=(0.2, 0.5), p: int = 8, runs: int = 2):
                          mean(works), mean(nets)))
     # paper-claim checks (soft, printed as derived values)
     by = {(s, n): (aw, mw, wk, nb) for s, n, aw, mw, wk, nb in rows}
+    wrap = (lambda n: f"Reorder({n})") if reorder else (lambda n: n)
     for scale in scales:
-        rel = by[(scale, "RelJoin(w=1)")]
-        aqe = by[(scale, "AQE")]
-        ss = by[(scale, "ShuffleSort")]
+        rel = by[(scale, wrap("RelJoin(w=1)"))]
+        aqe = by[(scale, wrap("AQE"))]
+        ss = by[(scale, wrap("ShuffleSort"))]
         emit(f"strategies/scale{scale}/claim_rel_vs_shufflesort_workload",
              0.0, f"ratio={rel[2] / ss[2]:.3f};expect<1")
         emit(f"strategies/scale{scale}/claim_rel_le_aqe_workload",

@@ -72,12 +72,13 @@ def select_join_method(left: TableStats, right: TableStats,
     ``left``/``right`` are the plan-order children; the model's A/B roles are
     assigned by size (A = larger). Returns the selected physical method.
     """
-    # Line 1-3: user hints short-circuit everything.
+    a, b, swapped = _ordered(left, right)
+
+    # Line 1-3: user hints short-circuit everything (but the audit record
+    # must still report which side plays the A role).
     if props.hint is not None:
         return Selection(props.hint, "user hint", float("nan"), {},
-                         swapped_sides=False)
-
-    a, b, swapped = _ordered(left, right)
+                         swapped_sides=swapped)
 
     # §4.4: invalid statistics (e.g. huge lazy-init sizes) -> fall back to the
     # platform's original absolute-size strategy, handled by the caller.
@@ -140,7 +141,8 @@ def select_absolute_size(left: TableStats, right: TableStats,
     otherwise shuffle sort (Spark's default) or shuffle hash."""
     a, b, swapped = _ordered(left, right)
     if props.hint is not None:
-        return Selection(props.hint, "user hint", float("nan"), {})
+        return Selection(props.hint, "user hint", float("nan"), {},
+                         swapped_sides=swapped)
     if props.equi and props.hashable and b.size_bytes <= threshold_bytes:
         return Selection(JoinMethod.BROADCAST_HASH,
                          f"abs size {b.size_bytes:.0f} <= {threshold_bytes:.0f}",

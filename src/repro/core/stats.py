@@ -91,15 +91,19 @@ def estimate_project(inp: TableStats, kept_byte_fraction: float) -> TableStats:
 
 def estimate_join(left: TableStats, right: TableStats,
                   fk_to_pk: bool = True,
-                  distinct_keys: float | None = None) -> TableStats:
+                  distinct_keys: float | None = None,
+                  fk_selectivity: float = 1.0) -> TableStats:
     """Output stats of an equi-join.
 
     For FK->PK joins (the TPC-DS star-schema case) output cardinality is the
-    probe-side cardinality; otherwise the textbook a*b/max(distinct) rule.
-    Output row size is the sum of both row sizes (all columns kept).
+    probe-side cardinality scaled by ``fk_selectivity`` — the fraction of the
+    build side's key domain that survived its filters (key-uniformity
+    assumption; 1.0 for unfiltered dimensions). Otherwise the textbook
+    a*b/max(distinct) rule. Output row size is the sum of both row sizes
+    (all columns kept).
     """
     if fk_to_pk:
-        card = left.cardinality
+        card = left.cardinality * min(max(fk_selectivity, 0.0), 1.0)
     else:
         d = distinct_keys or max(left.cardinality, right.cardinality, 1.0)
         card = left.cardinality * right.cardinality / max(d, 1.0)

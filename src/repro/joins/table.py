@@ -141,12 +141,17 @@ def compact_partitions(table: Table, capacity: int | None = None,
     Keeps post-join tables from growing unboundedly across a join chain
     (Spark analog: AQE's post-stage partition coalescing). Host-syncs the
     max per-partition live count, like any stage materialization.
+
+    The chosen capacity is rounded up to a power of two: downstream join
+    kernels then see a small set of distinct shapes, so XLA compilations
+    are reused across stages, queries, and strategies instead of
+    recompiling for every data-dependent row count.
     """
     if not table.stacked:
         raise ValueError("compact expects a stacked table")
     counts = jnp.sum(table.valid, axis=1)
     need = int(jnp.max(counts))
-    cap = capacity or max(8, int(need * slack) + 8)
+    cap = capacity or max(8, 1 << (max(int(need * slack), 1) - 1).bit_length())
     cap = min(cap, table.capacity)
 
     order = jnp.argsort(~table.valid, axis=1, stable=True)[:, :cap]

@@ -1,14 +1,22 @@
 """Mini SQL layer: logical plans, synthetic TPC-DS-like workload, selection
-strategies, and the adaptive stage-wise executor."""
+strategies, the logical plan optimizer (pushdown / pruning / System-R join
+reordering), and the adaptive stage-wise executor."""
 
 from .datagen import Catalog, generate
 from .executor import ExecutionResult, Executor, JoinDecision
-from .logical import Aggregate, Filter, Join, Node, Project, Scan
-from .queries import all_queries
+from .logical import (Aggregate, Filter, Join, JoinEdge, JoinGraph, Node,
+                      Project, Scan, extract_join_graph)
+from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
+                      optimize, prune_projections, push_down_filters)
+from .queries import all_queries, every_query, misordered_queries
 from .strategies import (AQEStrategy, ForcedStrategy, RelJoinStrategy,
-                         Strategy, default_strategies)
+                         ReorderingStrategy, Strategy, default_strategies)
 
 __all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
-           "JoinDecision", "Aggregate", "Filter", "Join", "Node", "Project",
-           "Scan", "all_queries", "AQEStrategy", "ForcedStrategy",
-           "RelJoinStrategy", "Strategy", "default_strategies"]
+           "JoinDecision", "Aggregate", "Filter", "Join", "JoinEdge",
+           "JoinGraph", "Node", "Project", "Scan", "extract_join_graph",
+           "OptimizedPlan", "enumerate_join_order", "modeled_tree_cost",
+           "optimize", "prune_projections", "push_down_filters",
+           "all_queries", "every_query", "misordered_queries", "AQEStrategy",
+           "ForcedStrategy", "RelJoinStrategy", "ReorderingStrategy",
+           "Strategy", "default_strategies"]

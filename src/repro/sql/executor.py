@@ -21,14 +21,18 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
-from ..core.selection import JoinProperties, Selection
+from ..core.cost_model import CostParams, JoinMethod
+from ..core.selection import JoinProperties, JoinType, Selection
 from ..core.stats import (StatsSource, TableStats, estimate_filter,
                           estimate_group_by, estimate_join)
 from ..joins.aggregate import group_aggregate
 from ..joins.methods import JoinReport, run_equi_join
 from ..joins.table import Table, compact_partitions
 from .datagen import Catalog
-from .logical import Aggregate, Filter, Join, Node, Project, Scan
+from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project, Scan,
+                      augment_edges, extract_join_graph, leaf_retain_fraction)
+from .planner import (JoinStep, catalog_schema, enumerate_join_order,
+                      modeled_tree_cost, prune_projections, push_down_filters)
 from .strategies import Strategy
 
 
@@ -78,7 +82,7 @@ class Executor:
     def __init__(self, catalog: Catalog, strategy: Strategy,
                  adaptive: bool = True, est_error: float = 1.0,
                  use_kernel: bool = False, capacity_factor: float = 2.0,
-                 compact: bool = True):
+                 compact: bool = True, reorder: Optional[bool] = None):
         self.catalog = catalog
         self.strategy = strategy
         self.adaptive = adaptive
@@ -87,11 +91,20 @@ class Executor:
         self.capacity_factor = capacity_factor
         self.compact = compact
         self.p = catalog.p
+        # Plan-space search: wrap any strategy in ReorderingStrategy (or pass
+        # reorder=True) to enable pushdown/pruning + adaptive join reordering.
+        self.reorder = (getattr(strategy, "reorder", False)
+                        if reorder is None else reorder)
+        self._schema = catalog_schema(catalog)
+        self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
 
     # -- public ---------------------------------------------------------------
 
     def execute(self, plan: Node) -> ExecutionResult:
         self._decisions: List[JoinDecision] = []
+        if self.reorder:
+            plan = prune_projections(push_down_filters(plan, self._schema),
+                                     self._schema)
         t0 = time.perf_counter()
         ann = self._eval(plan)
         ann.table.valid.block_until_ready()
@@ -132,25 +145,18 @@ class Executor:
                 TableStats(e.size_bytes * frac, e.cardinality, e.source))
 
         if isinstance(node, Join):
+            if self.reorder:
+                graph = extract_join_graph(node, self._schema)
+                if graph is not None and graph.n >= 3:
+                    return self._eval_region(graph)
             left = self._eval(node.left)
             right = self._eval(node.right)
             # Exchange boundary: re-measure both inputs (adaptive runtime
             # statistics). Non-adaptive mode keeps static estimates.
             lstats = self._boundary_stats(left, node.left)
             rstats = self._boundary_stats(right, node.right)
-            props = JoinProperties(join_type=node.join_type, hint=node.hint)
-            sel = self.strategy.select(lstats, rstats, props, self.p)
-            jt = {"inner": "inner"}.get(node.join_type.value,
-                                        node.join_type.value)
-            out, rep = self._run_join_with_retry(
-                sel, left.table, right.table, node.left_key, node.right_key,
-                jt)
-            if self.compact:
-                out = compact_partitions(out)
-            self._decisions.append(JoinDecision(sel, lstats, rstats, rep))
-            measured = out.measure()
-            est = estimate_join(left.estimated, right.estimated)
-            return _Annotated(out, measured, est)
+            return self._join(left, right, lstats, rstats, node.left_key,
+                              node.right_key, node.join_type, node.hint)
 
         if isinstance(node, Aggregate):
             child = self._eval(node.child)
@@ -165,26 +171,157 @@ class Executor:
 
         raise TypeError(f"unknown plan node {type(node)}")
 
+    # -- join execution --------------------------------------------------------
+
+    def _join(self, left: _Annotated, right: _Annotated,
+              lstats: TableStats, rstats: TableStats, lk: str, rk: str,
+              join_type: JoinType, hint) -> _Annotated:
+        """Select (per strategy) + execute one physical join; audit it."""
+        props = JoinProperties(join_type=join_type, hint=hint)
+        sel = self.strategy.select(lstats, rstats, props, self.p)
+        sel = self._engine_feasible(sel, lstats, rstats, props)
+        out, rep = self._run_join_with_retry(sel, left.table, right.table,
+                                             lk, rk, join_type.value)
+        if self.compact:
+            out = compact_partitions(out)
+        self._decisions.append(JoinDecision(sel, lstats, rstats, rep))
+        measured = out.measure()
+        est = estimate_join(left.estimated, right.estimated)
+        return _Annotated(out, measured, est)
+
+    def _engine_feasible(self, sel: Selection, lstats: TableStats,
+                         rstats: TableStats,
+                         props: JoinProperties) -> Selection:
+        """The engine always broadcasts the RIGHT (unique-key build) side,
+        while the model's broadcast-hash premise is that B — the *smaller*
+        side — is broadcast (§3.1.4). When the build side is the larger one
+        the premise is void: broadcasting it costs (p-1)|A_big|, strictly
+        worse than the shuffle the model ranks next. Degrade to shuffle
+        hash (same spirit as §4.4's validity fallback)."""
+        if (props.hint is None
+                and sel.method is JoinMethod.BROADCAST_HASH
+                and rstats.size_bytes > lstats.size_bytes):
+            return dataclasses.replace(
+                sel, method=JoinMethod.SHUFFLE_HASH,
+                reason=sel.reason + "; engine: build side larger -> shuffle")
+        return sel
+
+    # -- adaptive join reordering (planner DP at exchange boundaries) ----------
+
+    def _eval_region(self, graph) -> _Annotated:
+        """Execute an inner-join region with cost-based ordering.
+
+        All region leaves are materialized first (they are needed under any
+        order), giving their adaptive runtime statistics. The System-R DP
+        then enumerates the order; after every executed join — an exchange
+        boundary — the *remaining* order is re-enumerated with the measured
+        intermediate statistics, not just the next method re-selected. The
+        written order is kept whenever the DP cannot model a strictly
+        cheaper one.
+        """
+        anns = [self._eval(leaf) for leaf in graph.leaves]
+        stats = [self._boundary_stats(a, l)
+                 for a, l in zip(anns, graph.leaves)]
+        retain = [leaf_retain_fraction(l) for l in graph.leaves]
+        edges = augment_edges(graph)
+        plan_cost = modeled_tree_cost(graph, stats, retain, self._params)
+        order = enumerate_join_order(stats, retain, edges, self._params)
+        if order is None or not order.cost < plan_cost * (1 - 1e-9):
+            return self._exec_region_tree(graph.tree, graph, anns)
+        cur = anns[order.first]
+        cur_stats = stats[order.first]
+        joined = {order.first}
+        fallback = [s.build for s in order.steps]
+        while len(joined) < graph.n:
+            rest = [i for i in range(graph.n) if i not in joined]
+            step = (self._replan_step(cur_stats, joined, rest, stats, retain,
+                                      edges)
+                    or self._fallback_step(fallback, joined, edges))
+            b = step.build
+            cur = self._join(cur, anns[b], cur_stats, stats[b],
+                             step.probe_key, step.build_key, JoinType.INNER,
+                             None)
+            joined.add(b)
+            cur_stats = cur.measured if self.adaptive else cur.estimated
+        return cur
+
+    def _replan_step(self, cur_stats, joined, rest, stats, retain, edges):
+        """Re-enumerate the remaining join order from the current
+        intermediate (pseudo-leaf 0); return its first step."""
+        idx = {r: i + 1 for i, r in enumerate(rest)}
+        pstats = [cur_stats] + [stats[r] for r in rest]
+        pretain = [1.0] + [retain[r] for r in rest]
+        pedges = []
+        for e in edges:
+            if e.build in joined:
+                continue
+            if e.probe in joined:
+                pedges.append(JoinEdge(0, idx[e.build], e.probe_key,
+                                       e.build_key, e.derived))
+            else:
+                pedges.append(JoinEdge(idx[e.probe], idx[e.build],
+                                       e.probe_key, e.build_key, e.derived))
+        order = enumerate_join_order(pstats, pretain, pedges, self._params,
+                                     start=0)
+        if order is None or not order.steps:
+            return None
+        s = order.steps[0]
+        return JoinStep(rest[s.build - 1], s.probe_key, s.build_key,
+                        s.method, s.cost)
+
+    def _fallback_step(self, fallback, joined, edges):
+        """Next feasible leaf from the statically enumerated order."""
+        for b in fallback:
+            if b in joined:
+                continue
+            for e in edges:
+                if e.build == b and e.probe in joined:
+                    return JoinStep(b, e.probe_key, e.build_key, None, 0.0)
+        raise RuntimeError("no feasible join step left in region")
+
+    def _exec_region_tree(self, tree, graph, anns) -> _Annotated:
+        """Execute a region in its written order (leaves pre-evaluated)."""
+        if isinstance(tree, int):
+            return anns[tree]
+        left = self._exec_region_tree(tree[0], graph, anns)
+        right = self._exec_region_tree(tree[1], graph, anns)
+        e = graph.edges[tree[2]]
+        lstats = self._region_stats(left, tree[0], graph)
+        rstats = self._region_stats(right, tree[1], graph)
+        return self._join(left, right, lstats, rstats, e.probe_key,
+                          e.build_key, JoinType.INNER, None)
+
+    def _region_stats(self, ann, tree, graph) -> TableStats:
+        if isinstance(tree, int):
+            return self._boundary_stats(ann, graph.leaves[tree])
+        return ann.measured if self.adaptive else ann.estimated
+
+    #: Overflow retries: geometric doubling (bounded memory growth per step,
+    #: unlike the old ~p-times multiplier that could OOM a 20-partition run
+    #: in one retry) with enough attempts to reach 2^6x the starting slot
+    #: capacity for pathological skew.
+    MAX_CAPACITY_RETRIES = 7
+
     def _run_join_with_retry(self, sel, left, right, lk, rk, jt):
         """Skew mitigation: double slot capacity until no overflow (the
         engine-level straggler guard; DESIGN.md scale-out design)."""
         factor = self.capacity_factor
-        for _ in range(4):
+        for _ in range(self.MAX_CAPACITY_RETRIES):
             out, rep = run_equi_join(sel.method, left, right, lk, rk,
                                      join_type=jt, use_kernel=self.use_kernel,
                                      capacity_factor=factor)
             if all(e.overflow_rows == 0 for e in rep.exchanges):
                 return out, rep
-            factor *= 2 * max(self.p // 2, 1)
+            factor *= 2
         raise RuntimeError("shuffle overflow persisted after capacity retries")
 
     def _run_agg_with_retry(self, table, key, aggs):
         factor = self.capacity_factor
-        for _ in range(4):
+        for _ in range(self.MAX_CAPACITY_RETRIES):
             out, rep = group_aggregate(table, key, aggs, factor)
             if rep.overflow_rows == 0:
                 return out, rep
-            factor *= 2 * max(self.p // 2, 1)
+            factor *= 2
         raise RuntimeError("aggregate overflow persisted after retries")
 
     def _boundary_stats(self, ann: _Annotated, node: Node) -> TableStats:

@@ -82,3 +82,211 @@ def walk(plan: Node):
     yield plan
     for c in plan.children():
         yield from walk(c)
+
+
+# ---------------------------------------------------------------------------
+# Join-graph extraction (planner support): a *join region* is a maximal
+# subtree of hint-free INNER joins. Its leaves are the region's base
+# relations (scans, filter chains, projections, aggregates, or non-inner
+# join subtrees); its edges carry the equi-join keys, oriented probe ->
+# build (the build side's key is unique by the engine contract).
+# ---------------------------------------------------------------------------
+
+#: table name -> ordered column names; the planner derives it from a Catalog.
+Schema = dict
+
+
+def leaf_columns(node: Node, schema: Schema) -> Tuple[str, ...]:
+    """Output column names of a subtree (mirrors executor semantics,
+    including the ``_r`` rename of colliding build columns and the
+    ``_matched`` flag of left-outer joins)."""
+    if isinstance(node, Scan):
+        return tuple(schema[node.table])
+    if isinstance(node, Filter):
+        return leaf_columns(node.child, schema)
+    if isinstance(node, Project):
+        return tuple(node.columns)
+    if isinstance(node, Aggregate):
+        return (node.key,) + tuple(f"{op}_{col}" for col, op in node.aggs)
+    if isinstance(node, Join):
+        left = leaf_columns(node.left, schema)
+        if node.join_type in (JoinType.LEFT_SEMI, JoinType.LEFT_ANTI):
+            return left
+        out = list(left)
+        for c in leaf_columns(node.right, schema):
+            out.append(c if c not in out else f"{c}_r")
+        if node.join_type is JoinType.LEFT_OUTER:
+            out.append(f"{node.right_key}_matched")
+        return tuple(out)
+    raise TypeError(f"unknown plan node {type(node)}")
+
+
+def filter_chain(node: Node):
+    """Split the conjunctive filter list off the top of a subtree.
+
+    Returns ``(base, filters)`` where ``filters`` is the outermost-first
+    list of Filter specs and ``base`` is the first non-Filter descendant.
+    """
+    filters = []
+    while isinstance(node, Filter):
+        filters.append(node)
+        node = node.child
+    return node, filters
+
+
+def leaf_retain_fraction(node: Node) -> float:
+    """Fraction of the leaf's key domain surviving its filter chain —
+    the fk_selectivity a probe side experiences when joining this leaf
+    (key-uniformity assumption; 1.0 for unfiltered leaves)."""
+    base, filters = filter_chain(node)
+    frac = 1.0
+    for f in filters:
+        frac *= min(max(f.selectivity, 0.0), 1.0)
+    if isinstance(base, Project):
+        frac *= leaf_retain_fraction(base.child)
+    return frac
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinEdge:
+    """One equi-join predicate, oriented probe -> build (unique-key side)."""
+
+    probe: int       # leaf index of the probe-side relation
+    build: int       # leaf index of the build-side (unique key) relation
+    probe_key: str
+    build_key: str
+    derived: bool = False  # inferred through a key equivalence class
+
+
+@dataclasses.dataclass
+class JoinGraph:
+    """A join region: leaves + oriented equi-join edges + the plan's tree.
+
+    ``tree`` is the written join order: either a leaf index or a tuple
+    ``(left_tree, right_tree, edge_index)``.
+    """
+
+    leaves: list
+    edges: list
+    tree: object
+
+    @property
+    def n(self) -> int:
+        return len(self.leaves)
+
+
+class _ExtractionBailout(Exception):
+    """Region not safely reorderable (ambiguous or missing key ownership)."""
+
+
+def _is_region_join(node: Node) -> bool:
+    return (isinstance(node, Join) and node.join_type is JoinType.INNER
+            and node.hint is None)
+
+
+def extract_join_graph(root: Node, schema: Schema) -> Optional[JoinGraph]:
+    """Extract the join region rooted at ``root``.
+
+    Returns None when ``root`` is not a reorderable join, when key ownership
+    is ambiguous (a join key appearing in several leaves), or when leaves
+    share column names (the executor's collision renames would be
+    order-dependent).
+    """
+    if not _is_region_join(root):
+        return None
+    leaves: list = []
+    cols: list = []
+    edges: list = []
+
+    def owner(leaf_set, key):
+        found = [i for i in leaf_set if key in cols[i]]
+        if len(found) != 1:
+            raise _ExtractionBailout(key)
+        return found[0]
+
+    def leaf_set(tree):
+        if isinstance(tree, int):
+            return (tree,)
+        return leaf_set(tree[0]) + leaf_set(tree[1])
+
+    def go(n):
+        if _is_region_join(n):
+            lt = go(n.left)
+            rt = go(n.right)
+            e = JoinEdge(owner(leaf_set(lt), n.left_key),
+                         owner(leaf_set(rt), n.right_key),
+                         n.left_key, n.right_key)
+            edges.append(e)
+            return (lt, rt, len(edges) - 1)
+        i = len(leaves)
+        leaves.append(n)
+        cols.append(frozenset(leaf_columns(n, schema)))
+        return i
+
+    try:
+        tree = go(root)
+    except (_ExtractionBailout, KeyError, TypeError):
+        return None
+    total = sum(len(c) for c in cols)
+    if len(frozenset().union(*cols)) != total:  # cross-leaf name collision
+        return None
+    return JoinGraph(leaves, edges, tree)
+
+
+def key_equivalence_classes(graph: JoinGraph):
+    """Union-find over (leaf, column) pairs: keys equated by the region's
+    equi-join predicates, transitively (paper §2.2's equivalence of join
+    attributes across a multi-join query)."""
+    parent = {}
+
+    def find(x):
+        parent.setdefault(x, x)
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        parent[find(a)] = find(b)
+
+    for e in graph.edges:
+        union((e.probe, e.probe_key), (e.build, e.build_key))
+    classes = {}
+    for x in list(parent):
+        classes.setdefault(find(x), set()).add(x)
+    return [c for c in classes.values() if len(c) > 1]
+
+
+def unique_key_sides(graph: JoinGraph):
+    """(leaf, column) pairs whose values are unique within the leaf: build
+    sides of the written joins (engine contract) plus aggregate group keys."""
+    unique = {(e.build, e.build_key) for e in graph.edges}
+    for i, leaf in enumerate(graph.leaves):
+        base, _ = filter_chain(leaf)
+        if isinstance(base, Aggregate):
+            unique.add((i, base.key))
+    return unique
+
+
+def augment_edges(graph: JoinGraph):
+    """Original edges + edges derived through key equivalence classes.
+
+    Any leaf pair (u, v) whose columns fall in one equivalence class may be
+    joined directly, provided v's column is unique in v (valid build side).
+    This is what lets the DP join e.g. a dimension to an aggregated fact
+    before the probe fact arrives.
+    """
+    seen = {(e.probe, e.build, e.probe_key, e.build_key)
+            for e in graph.edges}
+    unique = unique_key_sides(graph)
+    out = list(graph.edges)
+    for cls in key_equivalence_classes(graph):
+        members = sorted(cls)
+        for u, cu in members:
+            for v, cv in members:
+                if u == v or (v, cv) not in unique:
+                    continue
+                if (u, v, cu, cv) not in seen:
+                    seen.add((u, v, cu, cv))
+                    out.append(JoinEdge(u, v, cu, cv, derived=True))
+    return out

@@ -1,0 +1,494 @@
+"""Logical plan optimizer: rewrites + cost-based join reordering.
+
+The paper (§4.2-§4.3) selects the physical method *per logical join* but
+takes the logical join order as given. This module supplies the missing
+plan-space search so that relative-cost selection composes into a globally
+optimal physical plan:
+
+  1. **Predicate pushdown** — filters sink through projections, inner joins
+     and group-by keys to the scans they constrain.
+  2. **Projection pruning** — scans are narrowed to the columns the plan
+     actually consumes (smaller row_bytes -> lower |A|,|B| -> lower k).
+  3. **System-R join ordering** — a left-deep dynamic program over each
+     inner-join region, scoring every candidate order with the RelJoin cost
+     model (Eqs. 4/8/10 via Algorithm 1's best feasible method) and
+     propagating intermediate sizes with ``estimate_join``. A bushy-plan
+     extension sits behind the ``bushy`` flag.
+
+The DP only ever *replaces* the written order when its modeled workload is
+strictly lower, so enabling reordering can't regress a well-written plan
+under the model. ``Executor`` re-runs the same DP at every exchange
+boundary with runtime-measured statistics (adaptive re-planning), via
+``enumerate_join_order(..., start=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from ..core.cost_model import CostParams, JoinMethod, method_cost
+from ..core.selection import JoinProperties, JoinType, select_join_method
+from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
+                          estimate_join, estimate_project)
+from .datagen import Catalog
+from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project, Scan,
+                      Schema, augment_edges, extract_join_graph, leaf_columns,
+                      leaf_retain_fraction)
+
+#: Static guess for an aggregate's group count as a fraction of input rows
+#: (used only when no runtime statistic exists yet; exchange boundaries
+#: replace it with the measured cardinality).
+DEFAULT_GROUP_FRACTION = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Schema / statistics helpers
+# ---------------------------------------------------------------------------
+
+def catalog_schema(catalog: Catalog) -> Schema:
+    return {name: tuple(t.columns) for name, t in catalog.tables.items()}
+
+
+def catalog_base_stats(catalog: Catalog) -> Dict[str, TableStats]:
+    """Exact base-table statistics (the catalog's header stats)."""
+    return {name: t.measure() for name, t in catalog.tables.items()}
+
+
+def estimate_leaf_stats(node: Node, base_stats: Dict[str, TableStats],
+                        schema: Schema) -> TableStats:
+    """Statically propagate (size, cardinality) through a leaf subtree."""
+    if isinstance(node, Scan):
+        return base_stats[node.table]
+    if isinstance(node, Filter):
+        return estimate_filter(
+            estimate_leaf_stats(node.child, base_stats, schema),
+            node.selectivity)
+    if isinstance(node, Project):
+        child = estimate_leaf_stats(node.child, base_stats, schema)
+        n_child = max(len(leaf_columns(node.child, schema)), 1)
+        return estimate_project(child, len(node.columns) / n_child)
+    if isinstance(node, Aggregate):
+        child = estimate_leaf_stats(node.child, base_stats, schema)
+        groups = max(child.cardinality * DEFAULT_GROUP_FRACTION, 1.0)
+        return estimate_group_by(child, groups)
+    if isinstance(node, Join):
+        left = estimate_leaf_stats(node.left, base_stats, schema)
+        right = estimate_leaf_stats(node.right, base_stats, schema)
+        retain = leaf_retain_fraction(node.right)
+        if node.join_type in (JoinType.LEFT_SEMI, JoinType.LEFT_ANTI):
+            # Output keeps probe columns only; anti is the complement.
+            frac = (retain if node.join_type is JoinType.LEFT_SEMI
+                    else max(1.0 - retain, 0.0))
+            card = left.cardinality * frac
+            return TableStats(card * left.row_bytes, card)
+        if node.join_type in (JoinType.LEFT_OUTER, JoinType.RIGHT_OUTER,
+                              JoinType.FULL_OUTER):
+            # Outer joins keep (at least) every probe row.
+            return estimate_join(left, right)
+        return estimate_join(left, right, fk_selectivity=retain)
+    raise TypeError(f"unknown plan node {type(node)}")
+
+
+def _step(probe: TableStats, build: TableStats, params: CostParams,
+          ) -> Tuple[JoinMethod, float]:
+    """Method + modeled workload of one candidate join (Algorithm 1 on the
+    candidate's statistics; Eq. 4/8/10 dispatch when selection fell back)."""
+    sel = select_join_method(probe, build, JoinProperties(), params)
+    cost = sel.cost
+    if not math.isfinite(cost):
+        a, b = ((probe, build) if probe.size_bytes >= build.size_bytes
+                else (build, probe))
+        cost = method_cost(sel.method, a.size_bytes, b.size_bytes,
+                           max(a.cardinality, 1.0), max(b.cardinality, 1.0),
+                           params)
+    return sel.method, cost
+
+
+# ---------------------------------------------------------------------------
+# System-R dynamic program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JoinStep:
+    """One executed join of a left-deep order: intermediate |><| leaf."""
+
+    build: int
+    probe_key: str
+    build_key: str
+    method: JoinMethod
+    cost: float
+
+
+@dataclasses.dataclass
+class JoinOrder:
+    """A complete order over a region. ``tree`` generalizes to bushy shapes:
+    a leaf index or ``(left_tree, right_tree, probe_key, build_key)``."""
+
+    first: int
+    steps: Tuple[JoinStep, ...]
+    cost: float
+    stats: TableStats
+    tree: object
+
+    def order(self) -> List[int]:
+        """Leaf indices in join sequence (derived from the tree so bushy
+        shapes are covered too; for left-deep orders this is
+        [first, step1.build, step2.build, ...])."""
+
+        def leaves(t):
+            if isinstance(t, int):
+                return [t]
+            return leaves(t[0]) + leaves(t[1])
+
+        return leaves(self.tree)
+
+
+@dataclasses.dataclass
+class _State:
+    cost: float
+    stats: TableStats
+    retain: float      # product of member retain fractions (build-side role)
+    root: int          # probe root (its unique key survives the joins)
+    first: int
+    steps: tuple
+    tree: object
+
+
+def enumerate_join_order(leaf_stats: List[TableStats],
+                         retain: List[float],
+                         edges,
+                         params: CostParams,
+                         bushy: bool = False,
+                         start: Optional[int] = None) -> Optional[JoinOrder]:
+    """System-R DP over a join region.
+
+    Left-deep by default: states are relation subsets; a leaf ``r`` extends
+    subset ``S`` iff an edge oriented toward ``r`` has its probe endpoint in
+    ``S`` (so ``r`` always joins through its unique key — the engine's
+    BuildRight contract is preserved under any enumerated order). With
+    ``bushy=True``, two disjoint subsets may also be merged when the edge
+    lands on the build subset's probe root, whose key stays unique through
+    FK->PK joins.
+
+    ``start`` pins the first (probe-root) relation — the executor's adaptive
+    re-planning hook uses it to extend a partially-executed order.
+    Returns None when no feasible complete order exists.
+    """
+    n = len(leaf_stats)
+    if n == 0:
+        return None
+    seeds = range(n) if start is None else (start,)
+    dp: Dict[frozenset, _State] = {}
+    for i in seeds:
+        dp[frozenset((i,))] = _State(0.0, leaf_stats[i], retain[i], i, i,
+                                     (), i)
+
+    by_build: Dict[int, list] = {}
+    for e in edges:
+        by_build.setdefault(e.build, []).append(e)
+
+    for size in range(1, n):
+        layer = [s for s in dp if len(s) == size]
+        for S in sorted(layer, key=sorted):
+            st = dp[S]
+            # Left-deep extension: S |><| {r}.
+            for r in range(n):
+                if r in S:
+                    continue
+                usable = [e for e in by_build.get(r, []) if e.probe in S]
+                if not usable:
+                    continue
+                e = usable[0]
+                method, cost = _step(st.stats, leaf_stats[r], params)
+                total = st.cost + cost
+                T = S | {r}
+                if T in dp and dp[T].cost <= total:
+                    continue
+                stats = estimate_join(st.stats, leaf_stats[r],
+                                      fk_selectivity=retain[r])
+                step = JoinStep(r, e.probe_key, e.build_key, method, cost)
+                dp[T] = _State(total, stats, st.retain * retain[r], st.root,
+                               st.first, st.steps + (step,),
+                               (st.tree, r, e.probe_key, e.build_key))
+        if bushy:
+            # Merge disjoint subsets: S1 (probe) |><| S2 (build via root).
+            subsets = sorted((s for s in dp if len(s) <= size), key=sorted)
+            for S1 in subsets:
+                for S2 in subsets:
+                    if len(S1) + len(S2) > n or S1 & S2:
+                        continue
+                    s1, s2 = dp[S1], dp[S2]
+                    usable = [e for e in by_build.get(s2.root, [])
+                              if e.probe in S1]
+                    if not usable:
+                        continue
+                    e = usable[0]
+                    method, cost = _step(s1.stats, s2.stats, params)
+                    total = s1.cost + s2.cost + cost
+                    T = S1 | S2
+                    if T in dp and dp[T].cost <= total:
+                        continue
+                    stats = estimate_join(s1.stats, s2.stats,
+                                          fk_selectivity=s2.retain)
+                    step = JoinStep(s2.root, e.probe_key, e.build_key,
+                                    method, cost)
+                    dp[T] = _State(total, stats, s1.retain * s2.retain,
+                                   s1.root, s1.first,
+                                   s1.steps + s2.steps + (step,),
+                                   (s1.tree, s2.tree, e.probe_key,
+                                    e.build_key))
+
+    full = dp.get(frozenset(range(n)))
+    if full is None:
+        return None
+    return JoinOrder(full.first, full.steps, full.cost, full.stats, full.tree)
+
+
+def modeled_tree_cost(graph: JoinGraph, leaf_stats: List[TableStats],
+                      retain: List[float], params: CostParams) -> float:
+    """Modeled workload (Eq. 4/8/10 sum) of executing the region in its
+    *written* order, with the same estimation rules the DP uses."""
+
+    def go(t):
+        if isinstance(t, int):
+            return leaf_stats[t], retain[t], 0.0
+        ls, lr, lc = go(t[0])
+        rs, rr, rc = go(t[1])
+        _, cost = _step(ls, rs, params)
+        out = estimate_join(ls, rs, fk_selectivity=rr)
+        return out, lr * rr, lc + rc + cost
+
+    return go(graph.tree)[2]
+
+
+# ---------------------------------------------------------------------------
+# Rewrites: predicate pushdown + projection pruning
+# ---------------------------------------------------------------------------
+
+def push_down_filters(node: Node, schema: Schema) -> Node:
+    """Sink every filter as close to its scan as semantics allow."""
+    if isinstance(node, Filter):
+        child = push_down_filters(node.child, schema)
+        return _sink(dataclasses.replace(node, child=child), schema)
+    if isinstance(node, Join):
+        return dataclasses.replace(
+            node, left=push_down_filters(node.left, schema),
+            right=push_down_filters(node.right, schema))
+    if isinstance(node, (Project, Aggregate)):
+        return dataclasses.replace(
+            node, child=push_down_filters(node.child, schema))
+    return node
+
+
+#: join types whose probe (left) side accepts pushed filters.
+_LEFT_PUSHABLE = (JoinType.INNER, JoinType.LEFT_OUTER, JoinType.LEFT_SEMI,
+                  JoinType.LEFT_ANTI)
+
+
+def _sink(f: Filter, schema: Schema) -> Node:
+    c = f.child
+    if isinstance(c, Join):
+        try:
+            lcols = leaf_columns(c.left, schema)
+            rcols = leaf_columns(c.right, schema)
+        except (KeyError, TypeError):
+            return f
+        in_l, in_r = f.column in lcols, f.column in rcols
+        if in_l and not in_r and c.join_type in _LEFT_PUSHABLE:
+            return dataclasses.replace(
+                c, left=_sink(dataclasses.replace(f, child=c.left), schema))
+        if in_r and not in_l and c.join_type is JoinType.INNER:
+            return dataclasses.replace(
+                c, right=_sink(dataclasses.replace(f, child=c.right), schema))
+        return f
+    if isinstance(c, Filter):
+        # Conjunctive filters commute: slide past a stuck sibling so a
+        # pushable predicate stacked above an unpushable one still sinks.
+        return dataclasses.replace(
+            c, child=_sink(dataclasses.replace(f, child=c.child), schema))
+    if isinstance(c, Project) and f.column in c.columns:
+        return dataclasses.replace(
+            c, child=_sink(dataclasses.replace(f, child=c.child), schema))
+    if isinstance(c, Aggregate) and f.column == c.key:
+        # Filtering on the group key commutes with grouping.
+        return dataclasses.replace(
+            c, child=_sink(dataclasses.replace(f, child=c.child), schema))
+    return f
+
+
+def prune_projections(node: Node, schema: Schema,
+                      required=None) -> Node:
+    """Narrow scans to the columns the plan consumes (top-down required-set
+    propagation). The root's output columns are always preserved, so the
+    rewrite never changes query results."""
+    try:
+        cols = leaf_columns(node, schema)
+    except (KeyError, TypeError):
+        return node
+    if required is None:
+        required = set(cols)
+    required = set(required) & set(cols)
+
+    if isinstance(node, Scan):
+        keep = tuple(c for c in schema[node.table] if c in required)
+        if keep and len(keep) < len(schema[node.table]):
+            return Project(node, keep)
+        return node
+    if isinstance(node, Filter):
+        return dataclasses.replace(
+            node, child=prune_projections(node.child, schema,
+                                          required | {node.column}))
+    if isinstance(node, Project):
+        keep = tuple(c for c in node.columns if c in required)
+        if not keep:
+            keep = node.columns
+        child = prune_projections(node.child, schema, set(keep))
+        return dataclasses.replace(node, child=child, columns=keep)
+    if isinstance(node, Aggregate):
+        need = {node.key} | {col for col, _ in node.aggs}
+        return dataclasses.replace(
+            node, child=prune_projections(node.child, schema, need))
+    if isinstance(node, Join):
+        try:
+            lcols = set(leaf_columns(node.left, schema))
+            rcols = set(leaf_columns(node.right, schema))
+        except (KeyError, TypeError):
+            return node
+        if lcols & rcols:
+            # Colliding names get order-dependent ``_r`` renames — pruning
+            # could silently change output naming. Recurse with full sets.
+            return dataclasses.replace(
+                node, left=prune_projections(node.left, schema),
+                right=prune_projections(node.right, schema))
+        lneed = (required & lcols) | {node.left_key}
+        rneed = (required & rcols) | {node.right_key}
+        return dataclasses.replace(
+            node, left=prune_projections(node.left, schema, lneed),
+            right=prune_projections(node.right, schema, rneed))
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan optimization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RegionDecision:
+    """Audit of one region's ordering decision."""
+
+    n_relations: int
+    plan_order_cost: float   # modeled workload of the written order
+    chosen_cost: float       # modeled workload of the emitted order
+    reordered: bool
+
+
+@dataclasses.dataclass
+class OptimizedPlan:
+    plan: Node
+    regions: List[RegionDecision]
+
+    @property
+    def plan_order_cost(self) -> float:
+        return sum(r.plan_order_cost for r in self.regions)
+
+    @property
+    def chosen_cost(self) -> float:
+        return sum(r.chosen_cost for r in self.regions)
+
+    @property
+    def reordered(self) -> bool:
+        return any(r.reordered for r in self.regions)
+
+
+def build_join_tree(tree, leaves: List[Node]) -> Node:
+    """Materialize a DP order tree back into logical Join nodes. A node is
+    a leaf index or ``(left_tree, right_tree, probe_key, build_key)`` —
+    left-deep steps are simply the case where the right subtree is a leaf."""
+    if isinstance(tree, int):
+        return leaves[tree]
+    left, right, pk, bk = tree
+    return Join(build_join_tree(left, leaves),
+                build_join_tree(right, leaves), pk, bk)
+
+
+def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
+             schema: Optional[Schema] = None,
+             base_stats: Optional[Dict[str, TableStats]] = None,
+             params: Optional[CostParams] = None,
+             pushdown: bool = True, prune: bool = True,
+             reorder: bool = True, bushy: bool = False,
+             min_region: int = 3) -> OptimizedPlan:
+    """Full logical optimization pass.
+
+    Statistics come from ``catalog`` (exact base stats) unless ``base_stats``
+    is given. Regions smaller than ``min_region`` relations are left in plan
+    order (a 2-relation region has nothing to reorder — side roles are
+    already assigned by Algorithm 1).
+    """
+    if schema is None:
+        if catalog is None:
+            raise ValueError("optimize() needs a catalog or an explicit "
+                             "schema")
+        schema = catalog_schema(catalog)
+    if base_stats is None:
+        base_stats = catalog_base_stats(catalog) if catalog else {}
+    if params is None:
+        params = CostParams(p=catalog.p if catalog else 8, w=1.0)
+
+    if pushdown:
+        plan = push_down_filters(plan, schema)
+    if prune:
+        plan = prune_projections(plan, schema)
+
+    regions: List[RegionDecision] = []
+
+    def rewrite(node: Node) -> Node:
+        if reorder and isinstance(node, Join):
+            graph = extract_join_graph(node, schema)
+            if graph is not None and graph.n >= min_region:
+                # Region leaves may hold nested reorderable regions (e.g.
+                # under an Aggregate): rewrite them first.
+                leaves = [rewrite(l) for l in graph.leaves]
+                try:
+                    stats = [estimate_leaf_stats(l, base_stats, schema)
+                             for l in leaves]
+                except KeyError:
+                    stats = None
+                if stats is not None:
+                    retain = [leaf_retain_fraction(l) for l in leaves]
+                    plan_cost = modeled_tree_cost(graph, stats, retain,
+                                                  params)
+                    order = enumerate_join_order(stats, retain,
+                                                 augment_edges(graph),
+                                                 params, bushy=bushy)
+                    if (order is not None
+                            and order.cost < plan_cost * (1 - 1e-9)):
+                        regions.append(RegionDecision(graph.n, plan_cost,
+                                                      order.cost, True))
+                        return build_join_tree(order.tree, leaves)
+                    regions.append(RegionDecision(graph.n, plan_cost,
+                                                  plan_cost, False))
+                return build_region_plan_order(
+                    JoinGraph(leaves, graph.edges, graph.tree))
+        if isinstance(node, Join):
+            return dataclasses.replace(node, left=rewrite(node.left),
+                                       right=rewrite(node.right))
+        if isinstance(node, (Filter, Project, Aggregate)):
+            return dataclasses.replace(node, child=rewrite(node.child))
+        return node
+
+    return OptimizedPlan(rewrite(plan), regions)
+
+
+def build_region_plan_order(graph: JoinGraph) -> Node:
+    """Rebuild a region's written order from its extracted tree."""
+
+    def go(t):
+        if isinstance(t, int):
+            return graph.leaves[t]
+        e = graph.edges[t[2]]
+        return Join(go(t[0]), go(t[1]), e.probe_key, e.build_key)
+
+    return go(graph.tree)

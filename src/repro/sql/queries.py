@@ -133,6 +133,64 @@ def q12_anti() -> Node:
                 join_type=JoinType.LEFT_ANTI)
 
 
+# ---------------------------------------------------------------------------
+# Deliberately mis-ordered queries (planner targets): the written join order
+# is provably suboptimal under the cost model — the System-R DP must find a
+# strictly cheaper order. Kept out of all_queries() so the baseline suite's
+# shape is unchanged; use misordered_queries() / every_query().
+# ---------------------------------------------------------------------------
+
+
+def q13_fact_fact_first() -> Node:
+    """Fact x aggregated-fact runs BEFORE the selective dim filters.
+
+    Optimal order joins the 10%-filtered item (then the 1/12 date window)
+    first, shrinking the probe side ~120x before the expensive
+    fact-aggregate join."""
+    cs_by_item = Aggregate(_cs(), "cs_item_sk", (("cs_sales_price", "sum"),))
+    j = Join(_ss(), cs_by_item, "ss_item_sk", "cs_item_sk")
+    j = Join(j, Filter(Scan("item"), "i_category", "lt", 1, selectivity=0.1),
+             "ss_item_sk", "i_item_sk")
+    j = Join(j, Filter(Scan("date_dim"), "d_month", "eq", 3,
+                       selectivity=1 / 12), "ss_sold_date_sk", "d_date_sk")
+    return Aggregate(j, "i_brand", (("ss_sales_price", "sum"),))
+
+
+def q14_big_dim_first() -> Node:
+    """The shuffle-heavy customer join (k < k0) runs BEFORE the 1/12
+    date filter that would shrink the fact side it shuffles."""
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, Scan("store"), "ss_store_sk", "s_store_sk")
+    j = Join(j, Filter(Scan("date_dim"), "d_month", "eq", 6,
+                       selectivity=1 / 12), "ss_sold_date_sk", "d_date_sk")
+    return Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
+
+
+def q15_late_filter() -> Node:
+    """Mis-placed AND mis-ordered: the selective item predicate is written
+    above both joins. Pushdown sinks it to the item scan; reordering then
+    joins the slimmed item ahead of the expensive customer join."""
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, Scan("item"), "ss_item_sk", "i_item_sk")
+    f = Filter(j, "i_category", "lt", 1, selectivity=0.1)
+    return Aggregate(f, "c_region", (("ss_sales_price", "sum"),))
+
+
+def misordered_queries() -> Dict[str, Node]:
+    return {
+        "q13_fact_fact_first": q13_fact_fact_first(),
+        "q14_big_dim_first": q14_big_dim_first(),
+        "q15_late_filter": q15_late_filter(),
+    }
+
+
+def every_query() -> Dict[str, Node]:
+    """The 12 baseline plans plus the 3 mis-ordered planner targets."""
+    out = all_queries()
+    out.update(misordered_queries())
+    return out
+
+
 def all_queries() -> Dict[str, Node]:
     return {
         "q1_star3": q1_star3(),

@@ -12,6 +12,9 @@ from ..core.stats import DEFAULT_WATERMARK_BYTES, TableStats
 
 class Strategy:
     name: str = "base"
+    #: When True the Executor runs the planner: pushdown + pruning rewrites
+    #: and adaptive cost-based join reordering (System-R DP per region).
+    reorder: bool = False
 
     def select(self, left: TableStats, right: TableStats,
                props: JoinProperties, p: int) -> Selection:
@@ -60,6 +63,35 @@ class ForcedStrategy(Strategy):
 
     def select(self, left, right, props, p):
         return select_forced(self.method, left, right, props)
+
+
+@dataclasses.dataclass
+class ReorderingStrategy(Strategy):
+    """Wrapper adding plan-space search to any baseline.
+
+    Method selection is delegated to the wrapped strategy unchanged; the
+    Executor, seeing ``reorder=True``, additionally runs predicate pushdown,
+    projection pruning, and the System-R DP join reordering (scored with the
+    RelJoin cost model at weight ``w``) with adaptive re-planning at every
+    exchange boundary. This lets every baseline in bench_strategies run
+    ±reordering.
+    """
+
+    inner: Strategy = dataclasses.field(default_factory=lambda:
+                                        RelJoinStrategy())
+    #: Workload weight for the ordering DP; None inherits the wrapped
+    #: strategy's w (when it has one) so the DP optimizes the same
+    #: objective the per-join selections use.
+    w: float | None = None
+
+    def __post_init__(self):
+        self.name = f"Reorder({self.inner.name})"
+        self.reorder = True
+        if self.w is None:
+            self.w = getattr(self.inner, "w", 1.0)
+
+    def select(self, left, right, props, p):
+        return self.inner.select(left, right, props, p)
 
 
 def default_strategies(w: float = 1.0):

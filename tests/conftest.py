@@ -1,0 +1,25 @@
+"""Shared fixtures: catalogs and strategy sets are session-scoped because
+building them (and warming the XLA compile cache on their shapes) dominates
+test wall time; every consumer treats them as read-only."""
+
+import pytest
+
+from repro.sql import default_strategies, generate
+
+
+@pytest.fixture(scope="session")
+def catalog():
+    """The standard small test catalog (read-only)."""
+    return generate(scale=0.1, p=4, seed=42)
+
+
+@pytest.fixture(scope="session")
+def skewed_catalogs():
+    """(uniform, zipf-skewed) pair with matching seed (read-only)."""
+    return (generate(scale=0.1, p=4, seed=7, skew=0.0),
+            generate(scale=0.1, p=4, seed=7, skew=1.2))
+
+
+@pytest.fixture(scope="session")
+def strategies():
+    return default_strategies()

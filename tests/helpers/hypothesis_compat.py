@@ -1,0 +1,153 @@
+"""Offline-safe stand-in for ``hypothesis``.
+
+When the real ``hypothesis`` package is installed (the ``[test-fuzz]``
+extra), this module re-exports it untouched and nothing changes. When it is
+absent — the default offline CI image — a deterministic shim with the same
+surface (``given``, ``settings``, ``strategies``) runs each property test
+over a fixed, reproducible grid of examples:
+
+  * every strategy contributes its boundary values first (min, then max),
+  * the remaining draws come from a PRNG seeded by the test's qualname, so
+    failures are stable across runs and machines,
+  * the number of examples is ``min(settings.max_examples, grid cap)`` —
+    the cap keeps JAX property tests (whose example *shapes* drive
+    recompilation) from dominating tier-1 wall time.
+
+Usage in test modules (drop-in for the hypothesis import):
+
+    from helpers.hypothesis_compat import given, settings
+    from helpers.hypothesis_compat import strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    #: Grid cap for the shim (override via env for deeper local fuzzing).
+    #: Kept small: in JAX property tests every distinct example *shape*
+    #: costs a compilation, and the grid is deterministic anyway.
+    MAX_GRID_EXAMPLES = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES",
+                                           "8"))
+
+    class _Strategy:
+        """One drawable dimension of a property test's example grid."""
+
+        def draw(self, i: int, rng: random.Random):
+            raise NotImplementedError
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value: float, max_value: float):
+            self.lo = float(min_value)
+            self.hi = float(max_value)
+
+        def draw(self, i, rng):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            # Log-uniform when the range spans decades (size/cardinality
+            # strategies), else uniform.
+            if self.lo > 0 and self.hi / self.lo > 1e3:
+                return math.exp(rng.uniform(math.log(self.lo),
+                                            math.log(self.hi)))
+            return rng.uniform(self.lo, self.hi)
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value: int, max_value: int):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def draw(self, i, rng):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements: _Strategy, min_size: int, max_size: int):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = int(max_size)
+
+        def draw(self, i, rng):
+            if i == 0:
+                n = self.min_size
+            elif i == 1:
+                n = self.max_size
+            else:
+                n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.draw(i + j + 2, rng) for j in range(n)]
+
+    class _StrategiesModule:
+        """Shim for ``hypothesis.strategies`` (the subset the suite uses)."""
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, **_ignored):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30, **_ignored):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_ignored):
+            return _Lists(elements, min_size, max_size)
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples: int = MAX_GRID_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Records ``max_examples`` on the (possibly given-wrapped) test."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Runs the test over the deterministic example grid."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = min(getattr(wrapper, "_compat_max_examples",
+                                MAX_GRID_EXAMPLES), MAX_GRID_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    args = [s.draw(i, rng) for s in arg_strategies]
+                    kwargs = {k: s.draw(i, rng)
+                              for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example #{i}: args={args!r} "
+                            f"kwargs={kwargs!r}: {e}") from e
+                return None
+
+            # pytest must not see the original parameters as fixtures:
+            # drop the __wrapped__ signature forwarding and publish an
+            # empty signature.
+            import inspect
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

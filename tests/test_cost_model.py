@@ -3,8 +3,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
 
 from repro.core import cost_model as cm
 from repro.core.cost_model import CostParams, JoinMethod

@@ -8,8 +8,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
 
 from repro.core.cost_model import JoinMethod
 from repro.joins import (broadcast, from_numpy, partition_round_robin,
@@ -153,6 +153,7 @@ def test_local_joins_agree(seed, na, nb):
                                   np.asarray(s.match_idx))
 
 
+@pytest.mark.slow
 def test_distributed_shard_map_executor():
     """Real collectives on 8 placeholder devices (subprocess so the main
     process keeps its single-device view)."""

@@ -4,8 +4,8 @@ mode executes the exact TPU kernel body on CPU)."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
 
 from repro.kernels import ops, ref
 

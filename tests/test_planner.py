@@ -1,0 +1,175 @@
+"""Planner tests: DP optimality vs exhaustive enumeration, rewrite
+correctness (results preserved on the whole query suite), the mis-ordered
+queries' modeled-workload wins, and no suite-level network regression with
+reordering enabled."""
+
+import itertools
+
+import pytest
+
+from repro.core.cost_model import CostParams
+from repro.core.stats import TableStats
+from repro.joins.ref import rows_as_set, rows_close
+from repro.sql import (Executor, RelJoinStrategy, ReorderingStrategy,
+                       all_queries, every_query, extract_join_graph,
+                       misordered_queries, optimize)
+from repro.sql.logical import JoinEdge, augment_edges, leaf_retain_fraction
+from repro.sql.planner import (catalog_schema, enumerate_join_order,
+                               estimate_leaf_stats, modeled_tree_cost, _step)
+
+P = CostParams(p=8, w=1.0)
+
+
+# ---------------------------------------------------------------------------
+# DP vs exhaustive enumeration (<= 4 relations)
+# ---------------------------------------------------------------------------
+
+def _stats(size_kb, card):
+    return TableStats(size_kb * 1024.0, card)
+
+
+def _exhaustive_best(stats, retain, edges, params):
+    """Brute-force the cheapest feasible left-deep order."""
+    from repro.core.stats import estimate_join
+    n = len(stats)
+    best = None
+    for perm in itertools.permutations(range(n)):
+        cur, cost, ok = stats[perm[0]], 0.0, True
+        joined = {perm[0]}
+        for r in perm[1:]:
+            if not any(e.build == r and e.probe in joined for e in edges):
+                ok = False
+                break
+            _, c = _step(cur, stats[r], params)
+            cost += c
+            cur = estimate_join(cur, stats[r], fk_selectivity=retain[r])
+            joined.add(r)
+        if ok and (best is None or cost < best):
+            best = cost
+    return best
+
+
+GRAPHS = {
+    # chain: 0 -> 1 -> ... (probe 0 joins dims 1..k in any feasible order)
+    "star3": ([_stats(4000, 50_000), _stats(40, 500), _stats(400, 5_000)],
+              [1.0, 0.2, 1.0],
+              [JoinEdge(0, 1, "k1", "pk1"), JoinEdge(0, 2, "k2", "pk2")]),
+    "star4": ([_stats(8000, 100_000), _stats(30, 400), _stats(900, 9_000),
+               _stats(90, 1_000)],
+              [1.0, 0.05, 1.0, 0.5],
+              [JoinEdge(0, 1, "a", "pa"), JoinEdge(0, 2, "b", "pb"),
+               JoinEdge(0, 3, "c", "pc")]),
+    "chain4": ([_stats(6000, 60_000), _stats(600, 6_000), _stats(60, 600),
+                _stats(6, 60)],
+               [1.0, 1.0, 0.3, 1.0],
+               [JoinEdge(0, 1, "x", "px"), JoinEdge(1, 2, "y", "py"),
+                JoinEdge(2, 3, "z", "pz")]),
+}
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_dp_matches_exhaustive(gname):
+    stats, retain, edges = GRAPHS[gname]
+    order = enumerate_join_order(stats, retain, edges, P)
+    assert order is not None
+    brute = _exhaustive_best(stats, retain, edges, P)
+    assert order.cost == pytest.approx(brute)
+    # the order is complete and starts from a feasible probe root
+    assert sorted(order.order()) == list(range(len(stats)))
+
+
+def test_dp_respects_orientation():
+    """A leaf that is only ever a probe can never be added as build side."""
+    stats = [_stats(100, 1000), _stats(10, 100)]
+    edges = [JoinEdge(0, 1, "k", "pk")]
+    order = enumerate_join_order(stats, [1.0, 1.0], edges, P, start=1)
+    assert order is None  # cannot start from the build-only leaf
+
+
+def test_dp_bushy_no_worse_than_left_deep():
+    for gname in sorted(GRAPHS):
+        stats, retain, edges = GRAPHS[gname]
+        ld = enumerate_join_order(stats, retain, edges, P)
+        bushy = enumerate_join_order(stats, retain, edges, P, bushy=True)
+        assert bushy.cost <= ld.cost + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Rewrites preserve results on the whole suite
+# ---------------------------------------------------------------------------
+
+def _result_rows(res):
+    return rows_as_set(res.table.to_numpy())
+
+
+@pytest.mark.parametrize("qname", sorted(every_query()))
+def test_optimized_plans_preserve_results(catalog, qname):
+    """Pushdown + pruning + reordering never change query results (row
+    count + per-row checksum vs the unoptimized execution)."""
+    plan = every_query()[qname]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    opt = Executor(catalog,
+                   ReorderingStrategy(RelJoinStrategy())).execute(plan)
+    assert base.rows == opt.rows
+    assert rows_close(_result_rows(opt), _result_rows(base)), qname
+
+
+def test_pushdown_prune_only_preserve_results(catalog):
+    """The pure logical rewrites (no reordering) also preserve results."""
+    for qname in ("q1_star3", "q7_filtered_fact", "q15_late_filter"):
+        plan = every_query()[qname]
+        base = Executor(catalog, RelJoinStrategy()).execute(plan)
+        res = optimize(plan, catalog, reorder=False)
+        opt = Executor(catalog, RelJoinStrategy()).execute(res.plan)
+        assert rows_close(_result_rows(opt), _result_rows(base)), qname
+
+
+# ---------------------------------------------------------------------------
+# The mis-ordered queries: strict modeled-workload wins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", sorted(misordered_queries()))
+def test_misordered_queries_strictly_improved(catalog, qname):
+    res = optimize(misordered_queries()[qname], catalog)
+    assert res.reordered, qname
+    assert res.chosen_cost < res.plan_order_cost, qname
+
+
+def test_modeled_tree_cost_matches_region(catalog):
+    """Plan-order modeled cost is reproducible from the extracted graph."""
+    schema = catalog_schema(catalog)
+    plan = misordered_queries()["q14_big_dim_first"]
+    graph = extract_join_graph(plan.child, schema)
+    assert graph is not None and graph.n == 4
+    base = {name: t.measure() for name, t in catalog.tables.items()}
+    stats = [estimate_leaf_stats(l, base, schema) for l in graph.leaves]
+    retain = [leaf_retain_fraction(l) for l in graph.leaves]
+    plan_cost = modeled_tree_cost(graph, stats, retain, P)
+    dp = enumerate_join_order(stats, retain, augment_edges(graph), P)
+    assert dp.cost < plan_cost
+
+
+# ---------------------------------------------------------------------------
+# No suite-level regression with reordering enabled
+# ---------------------------------------------------------------------------
+
+def test_reordering_does_not_regress_suite_network(catalog):
+    """Total executed network bytes over the 12 baseline queries must not
+    increase when reordering is enabled (per-query shifts between network
+    and local workload are allowed — the model optimizes their w-sum)."""
+    plain = re = 0.0
+    for qname, plan in all_queries().items():
+        plain += Executor(catalog, RelJoinStrategy()
+                          ).execute(plan).network_bytes
+        re += Executor(catalog, ReorderingStrategy(RelJoinStrategy())
+                       ).execute(plan).network_bytes
+    assert re <= plain * 1.001
+
+
+def test_misordered_queries_network_improves(catalog):
+    """On the deliberately mis-ordered queries the win must be large."""
+    for qname, plan in misordered_queries().items():
+        plain = Executor(catalog, RelJoinStrategy()).execute(plan)
+        re = Executor(catalog,
+                      ReorderingStrategy(RelJoinStrategy())).execute(plan)
+        assert re.network_bytes < plain.network_bytes, qname

@@ -1,8 +1,8 @@
 """Tests for Algorithm 1 selection + baseline strategies + PSTS."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
 
 from repro.core import (AQE_BROADCAST_THRESHOLD_BYTES, CostParams, JoinMethod,
                         JoinProperties, JoinType, TableStats, compute_psts,

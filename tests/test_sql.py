@@ -6,22 +6,12 @@ import pytest
 
 from repro.core.cost_model import JoinMethod, k0_threshold, CostParams
 from repro.joins.aggregate import group_aggregate
-from repro.sql import (AQEStrategy, Executor, ForcedStrategy, RelJoinStrategy,
-                       all_queries, generate)
+from repro.sql import Executor, RelJoinStrategy, all_queries
 from repro.sql.logical import Aggregate, Filter, Join, Scan
 from repro.joins.ref import rows_as_set, rows_close
 
 
-@pytest.fixture(scope="module")
-def catalog():
-    return generate(scale=0.1, p=4, seed=42)
-
-
-@pytest.fixture(scope="module")
-def strategies():
-    return [ForcedStrategy(JoinMethod.SHUFFLE_SORT),
-            ForcedStrategy(JoinMethod.SHUFFLE_HASH),
-            AQEStrategy(), RelJoinStrategy()]
+# catalog / strategies fixtures are session-scoped in conftest.py.
 
 
 def _result_rows(res):
@@ -131,10 +121,9 @@ def test_hint_respected(catalog):
     assert res.methods() == [JoinMethod.SHUFFLE_SORT]
 
 
-def test_skewed_catalog_still_correct():
+def test_skewed_catalog_still_correct(skewed_catalogs):
     """§3.7: data skew does not break selection or correctness."""
-    cat_u = generate(scale=0.1, p=4, seed=7, skew=0.0)
-    cat_s = generate(scale=0.1, p=4, seed=7, skew=1.2)
+    cat_u, cat_s = skewed_catalogs
     plan = all_queries()["q1_star3"]
     ru = Executor(cat_u, RelJoinStrategy(),
                   capacity_factor=4.0).execute(plan)
