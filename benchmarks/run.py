@@ -21,13 +21,13 @@ def main() -> None:
                     help="smaller scales / fewer repeats")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: strategies,accuracy,psts,"
-                         "w_sweep,cost_model,kernels,roofline")
+                         "w_sweep,cost_model,kernels,roofline,reorder,skew")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_accuracy, bench_cost_model, bench_kernels,
-                   bench_psts, bench_roofline, bench_strategies,
-                   bench_w_sweep)
+                   bench_psts, bench_reorder, bench_roofline, bench_skew,
+                   bench_strategies, bench_w_sweep)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -51,6 +51,12 @@ def main() -> None:
     if want("w_sweep"):
         bench_w_sweep.run(scale=0.2 if args.quick else 0.3,
                           runs=1 if args.quick else 2)
+    if want("reorder"):
+        bench_reorder.run(scale=0.2)
+    if want("skew"):
+        bench_skew.run(scale=0.2,
+                       zipfs=(0.0, 1.2) if args.quick else (0.0, 0.8, 1.2,
+                                                            1.4))
     if want("roofline"):
         bench_roofline.run()
 

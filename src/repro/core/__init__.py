@@ -5,9 +5,10 @@ tensor-op planner that applies the same cost model to sharded-LM collectives.
 
 from .cost_model import (CostParams, JoinMethod, RANK, all_costs,
                          broadcast_hash_cost, broadcast_nl_cost,
-                         broadcast_preferred, cartesian_cost, k0_threshold,
-                         method_cost, relative_size, shuffle_hash_cost,
-                         shuffle_sort_cost)
+                         broadcast_preferred, cartesian_cost,
+                         default_salt_factor, k0_threshold, method_cost,
+                         relative_size, salted_shuffle_hash_cost,
+                         shuffle_hash_cost, shuffle_sort_cost)
 from .psts import PSTSReport, compute_psts, selections_differ
 from .selection import (AQE_BROADCAST_THRESHOLD_BYTES, INNER_LIKE,
                         JoinProperties, JoinType, Selection,
@@ -20,8 +21,9 @@ from .stats import (DEFAULT_WATERMARK_BYTES, StatsSource, TableStats,
 __all__ = [
     "CostParams", "JoinMethod", "RANK", "all_costs", "broadcast_hash_cost",
     "broadcast_nl_cost", "broadcast_preferred", "cartesian_cost",
-    "k0_threshold", "method_cost", "relative_size", "shuffle_hash_cost",
-    "shuffle_sort_cost", "PSTSReport", "compute_psts", "selections_differ",
+    "default_salt_factor", "k0_threshold", "method_cost", "relative_size",
+    "salted_shuffle_hash_cost", "shuffle_hash_cost", "shuffle_sort_cost",
+    "PSTSReport", "compute_psts", "selections_differ",
     "AQE_BROADCAST_THRESHOLD_BYTES", "INNER_LIKE", "JoinProperties",
     "JoinType", "Selection", "select_absolute_size", "select_forced",
     "select_join_method", "DEFAULT_WATERMARK_BYTES", "StatsSource",

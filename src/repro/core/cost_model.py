@@ -22,19 +22,22 @@ from typing import Dict
 
 
 class JoinMethod(enum.Enum):
-    """Physical distributed join methods modeled by the paper."""
+    """Physical distributed join methods modeled by the paper, plus the
+    skew-aware salted shuffle extension (not in the paper's Table 2)."""
 
     BROADCAST_HASH = "broadcast_hash"
     SHUFFLE_HASH = "shuffle_hash"
     SHUFFLE_SORT = "shuffle_sort"
     BROADCAST_NL = "broadcast_nl"
     CARTESIAN = "cartesian"
+    SALTED_SHUFFLE_HASH = "salted_shuffle_hash"
 
 
 #: Paper Table 2 — higher-rank methods are preferred when feasible.
 RANK: Dict[JoinMethod, int] = {
     JoinMethod.BROADCAST_HASH: 3,
     JoinMethod.SHUFFLE_HASH: 3,
+    JoinMethod.SALTED_SHUFFLE_HASH: 3,
     JoinMethod.SHUFFLE_SORT: 2,
     JoinMethod.BROADCAST_NL: 1,
     JoinMethod.CARTESIAN: 1,
@@ -87,18 +90,31 @@ def probe_workload(size_a: float, size_b: float, card_a: float, card_b: float,
     return size_a + (card_a * l_fan / card_b) * size_b
 
 
-def shuffle_workload(size_a: float, size_b: float, params: CostParams) -> float:
-    """Eq. 5: C_shuffle = ((p-1)/p)(|A| + |B|) — network workload of shuffle."""
+def shuffle_workload(size_a: float, size_b: float, params: CostParams,
+                     skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+    """Eq. 5: C_shuffle = ((p-1)/p)(|A| + |B|) — network workload of shuffle.
+
+    The paper charges total exchanged bytes, implicitly assuming uniform key
+    distributions. Under key skew the hottest partition — not the mean —
+    bounds the stage, so each side is charged at its straggler load:
+    ``skew = max_partition_load / mean_partition_load`` (1.0 reproduces the
+    paper exactly).
+    """
     p = params.p
-    return (p - 1) / p * (size_a + size_b)
+    return (p - 1) / p * (skew_a * size_a + skew_b * size_b)
 
 
 def sort_workload(size_a: float, size_b: float, card_a: float, card_b: float,
-                  params: CostParams) -> float:
-    """Eq. 6: C_sort = |A| log2(a/p) + |B| log2(b/p)."""
+                  params: CostParams,
+                  skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+    """Eq. 6: C_sort = |A| log2(a/p) + |B| log2(b/p).
+
+    Skew-adjusted: the straggler partition holds ``skew * card / p`` rows, so
+    both the touched bytes and the sort depth scale with the skew factor.
+    """
     p = params.p
-    wa = size_a * math.log2(max(card_a / p, 1.0))
-    wb = size_b * math.log2(max(card_b / p, 1.0))
+    wa = skew_a * size_a * math.log2(max(skew_a * card_a / p, 1.0))
+    wb = skew_b * size_b * math.log2(max(skew_b * card_b / p, 1.0))
     return wa + wb
 
 
@@ -133,20 +149,68 @@ def broadcast_hash_cost(size_a: float, size_b: float, params: CostParams) -> flo
     return size_a + (w * p - w + p + 1) * size_b
 
 
-def shuffle_hash_cost(size_a: float, size_b: float, params: CostParams) -> float:
-    """Eq. 10: C_shuffleHash = ((wp-w+p)/p)|A| + ((wp-w+2p)/p)|B|."""
+def shuffle_hash_cost(size_a: float, size_b: float, params: CostParams,
+                      skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+    """Eq. 10: C_shuffleHash = ((wp-w+p)/p)|A| + ((wp-w+2p)/p)|B|.
+
+    Under key skew every shuffle-phase term (exchange, build, probe) is
+    bounded by the straggler partition, so each side's coefficient scales
+    with its skew factor: |A| -> skew_a|A|, |B| -> skew_b|B|. Defaults
+    reproduce the paper's uniform-distribution formula.
+    """
     p, w = params.p, params.w
-    return (w * p - w + p) / p * size_a + (w * p - w + 2 * p) / p * size_b
+    return ((w * p - w + p) / p * skew_a * size_a
+            + (w * p - w + 2 * p) / p * skew_b * size_b)
 
 
 def shuffle_sort_cost(size_a: float, size_b: float, card_a: float, card_b: float,
-                      params: CostParams) -> float:
-    """Eq. 8: ((wp-w+p)/p + log2(a/p))|A| + ((wp-w+p)/p + log2(b/p))|B|."""
+                      params: CostParams,
+                      skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+    """Eq. 8: ((wp-w+p)/p + log2(a/p))|A| + ((wp-w+p)/p + log2(b/p))|B|.
+
+    Skew-adjusted like :func:`shuffle_hash_cost`; the sort-depth log terms
+    additionally grow with the straggler partition's cardinality.
+    """
     p, w = params.p, params.w
     base = (w * p - w + p) / p
-    ta = base + math.log2(max(card_a / p, 1.0))
-    tb = base + math.log2(max(card_b / p, 1.0))
-    return ta * size_a + tb * size_b
+    ta = base + math.log2(max(skew_a * card_a / p, 1.0))
+    tb = base + math.log2(max(skew_b * card_b / p, 1.0))
+    return ta * skew_a * size_a + tb * skew_b * size_b
+
+
+def default_salt_factor(skew: float, params: CostParams) -> int:
+    """Salt-bucket count r for the salted shuffle: enough buckets to flatten
+    a straggler of factor ``skew`` (r ~ ceil(s)), at least 2 so the method is
+    a real salting, at most p (more salts than partitions cannot spread
+    further)."""
+    return int(min(params.p, max(2, math.ceil(skew - 1e-9))))
+
+
+def salted_shuffle_hash_cost(size_a: float, size_b: float, params: CostParams,
+                             skew_a: float = 1.0,
+                             r: int | None = None) -> float:
+    """Skew-mitigated shuffle hash: salt hot probe keys across ``r`` salt
+    buckets and replicate the matching build rows r-fold.
+
+    Modeled as shuffle hash with two adjustments:
+
+      * the probe side's straggler is flattened to the residual
+        ``max(1, skew_a / r)`` — each hot key's rows now spread over r
+        partitions;
+      * the build side pays a replication surcharge ``1 + (r-1)/p``: only
+        the hot-bucket slice of B (at most ~a partition's fair share, 1/p of
+        |B|) is replicated r-fold, and the replicas ride the same shuffle +
+        build + probe phases.
+
+    At skew 1 this is strictly worse than plain shuffle hash (the surcharge
+    buys nothing), so Algorithm 1 only deviates from the paper's five-method
+    choice when measured skew makes plain shuffle lose.
+    """
+    r = r if r is not None else default_salt_factor(skew_a, params)
+    residual = max(1.0, skew_a / max(r, 1))
+    replication = 1.0 + (r - 1) / params.p
+    return shuffle_hash_cost(size_a, size_b, params,
+                             skew_a=residual, skew_b=replication)
 
 
 def broadcast_nl_cost(size_a: float, size_b: float, card_a: float,
@@ -164,25 +228,36 @@ def cartesian_cost(size_a: float, size_b: float, card_a: float,
 
 
 def method_cost(method: JoinMethod, size_a: float, size_b: float,
-                card_a: float, card_b: float, params: CostParams) -> float:
-    """Dispatch to the per-method overall cost."""
+                card_a: float, card_b: float, params: CostParams,
+                skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+    """Dispatch to the per-method overall cost. Broadcast-family methods are
+    skew-invariant (B is fully replicated regardless of key distribution and
+    A never moves); shuffle-family methods are charged at the straggler."""
     if method is JoinMethod.BROADCAST_HASH:
         return broadcast_hash_cost(size_a, size_b, params)
     if method is JoinMethod.SHUFFLE_HASH:
-        return shuffle_hash_cost(size_a, size_b, params)
+        return shuffle_hash_cost(size_a, size_b, params, skew_a, skew_b)
+    if method is JoinMethod.SALTED_SHUFFLE_HASH:
+        return salted_shuffle_hash_cost(size_a, size_b, params, skew_a)
     if method is JoinMethod.SHUFFLE_SORT:
-        return shuffle_sort_cost(size_a, size_b, card_a, card_b, params)
+        return shuffle_sort_cost(size_a, size_b, card_a, card_b, params,
+                                 skew_a, skew_b)
     if method is JoinMethod.BROADCAST_NL:
         return broadcast_nl_cost(size_a, size_b, card_a, params)
     if method is JoinMethod.CARTESIAN:
+        # Round-robin co-shuffle: destinations are key-independent, so the
+        # exchange is skew-free by construction.
         return cartesian_cost(size_a, size_b, card_a, params)
     raise ValueError(f"unknown method {method}")
 
 
 def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
-              params: CostParams) -> Dict[JoinMethod, float]:
+              params: CostParams,
+              skew_a: float = 1.0, skew_b: float = 1.0
+              ) -> Dict[JoinMethod, float]:
     """Costs of every modeled method for one logical join."""
-    return {m: method_cost(m, size_a, size_b, card_a, card_b, params)
+    return {m: method_cost(m, size_a, size_b, card_a, card_b, params,
+                           skew_a, skew_b)
             for m in JoinMethod}
 
 
@@ -190,17 +265,30 @@ def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
 # The relative-size criterion (Eq. 13).
 # ---------------------------------------------------------------------------
 
-def k0_threshold(params: CostParams) -> float:
+def k0_threshold(params: CostParams, skew: float = 1.0) -> float:
     """Eq. 13: k0 = (pw + p - w)/w — broadcast wins iff |A| > k0 |B|.
 
     For w -> 0 the threshold diverges (broadcast's extra build work p|B| can
     never be amortized by saving network), matching §5.5's observation that
     small w makes RelJoin behave like the forced-shuffle strategies.
+
+    With probe-side key skew ``s`` (both sides charged at the straggler) the
+    shuffle side of Eq. 13's comparison inflates and the threshold drops:
+
+        k0(s) = (g*p + 1 - s*(g+1)) / (s*g - 1),   g = (wp - w + p)/p,
+
+    which reduces to the paper's k0 at s=1 and can reach 0 for extreme skew
+    (broadcast always wins — it is skew-invariant).
     """
     p, w = params.p, params.w
-    if w == 0:
-        return math.inf
-    return (p * w + p - w) / w
+    if skew <= 1.0:
+        if w == 0:
+            return math.inf
+        return (p * w + p - w) / w
+    # g = 1 + w(p-1)/p >= 1, so skew*g > 1 on this (skew > 1) path and the
+    # denominator is always positive.
+    g = (w * p - w + p) / p
+    return max((g * p + 1 - skew * (g + 1)) / (skew * g - 1), 0.0)
 
 
 def relative_size(size_a: float, size_b: float) -> float:
@@ -210,6 +298,8 @@ def relative_size(size_a: float, size_b: float) -> float:
     return size_a / size_b
 
 
-def broadcast_preferred(size_a: float, size_b: float, params: CostParams) -> bool:
-    """True iff C_broadcastHash < C_shuffleHash, i.e. k > k0 (paper §3.6.2)."""
-    return relative_size(size_a, size_b) > k0_threshold(params)
+def broadcast_preferred(size_a: float, size_b: float, params: CostParams,
+                        skew: float = 1.0) -> bool:
+    """True iff C_broadcastHash < C_shuffleHash, i.e. k > k0 (paper §3.6.2).
+    ``skew`` is the probe-side straggler factor (1.0 = paper's rule)."""
+    return relative_size(size_a, size_b) > k0_threshold(params, skew)

@@ -24,7 +24,7 @@ def _is_shuffle(m: JoinMethod) -> bool:
     # Paper §5.4 treats shuffle sort and shuffle hash as the same method when
     # counting selection differences (their performance is near-identical).
     return m in (JoinMethod.SHUFFLE_SORT, JoinMethod.SHUFFLE_HASH,
-                 JoinMethod.CARTESIAN)
+                 JoinMethod.SALTED_SHUFFLE_HASH, JoinMethod.CARTESIAN)
 
 
 def selections_differ(m1: JoinMethod, m2: JoinMethod) -> bool:

@@ -13,8 +13,9 @@ import enum
 from typing import Optional
 
 from .cost_model import (CostParams, JoinMethod, broadcast_hash_cost,
-                         broadcast_nl_cost, cartesian_cost, shuffle_hash_cost,
-                         shuffle_sort_cost)
+                         broadcast_nl_cost, cartesian_cost,
+                         default_salt_factor, salted_shuffle_hash_cost,
+                         shuffle_hash_cost, shuffle_sort_cost)
 from .stats import DEFAULT_WATERMARK_BYTES, TableStats
 
 
@@ -54,6 +55,7 @@ class Selection:
     costs: dict
     used_fallback: bool = False
     swapped_sides: bool = False  # True when |B| > |A| and sides were flipped
+    salt_r: int = 1              # salt buckets when SALTED_SHUFFLE_HASH
 
 
 def _ordered(left: TableStats, right: TableStats):
@@ -89,11 +91,19 @@ def select_join_method(left: TableStats, right: TableStats,
 
     sa, sb = a.size_bytes, b.size_bytes
     ca, cb = max(a.cardinality, 1.0), max(b.cardinality, 1.0)
+    # Straggler factors of the A (probe) and B (build) join keys. Statistics
+    # without a measured skew carry the uniform default 1.0, reproducing the
+    # paper's costs bit-for-bit.
+    ka, kb = max(a.skew, 1.0), max(b.skew, 1.0)
+    salt_r = default_salt_factor(ka, params)
 
     costs = {
         JoinMethod.BROADCAST_HASH: broadcast_hash_cost(sa, sb, params),
-        JoinMethod.SHUFFLE_HASH: shuffle_hash_cost(sa, sb, params),
-        JoinMethod.SHUFFLE_SORT: shuffle_sort_cost(sa, sb, ca, cb, params),
+        JoinMethod.SHUFFLE_HASH: shuffle_hash_cost(sa, sb, params, ka, kb),
+        JoinMethod.SALTED_SHUFFLE_HASH: salted_shuffle_hash_cost(
+            sa, sb, params, ka, salt_r),
+        JoinMethod.SHUFFLE_SORT: shuffle_sort_cost(sa, sb, ca, cb, params,
+                                                   ka, kb),
         JoinMethod.BROADCAST_NL: broadcast_nl_cost(sa, sb, ca, params),
         JoinMethod.CARTESIAN: cartesian_cost(sa, sb, ca, params),
     }
@@ -107,6 +117,21 @@ def select_join_method(left: TableStats, right: TableStats,
             else:
                 m = JoinMethod.SHUFFLE_HASH
                 why = "equi, hashable, C_sh <= C_bh (k <= k0)"
+            # Skew extension: the salted variant replaces the hash-family
+            # pick only when *strictly* cheaper — at skew 1 its replication
+            # surcharge makes that impossible, so uniform-key selections are
+            # identical to the paper's Algorithm 1. It is also only eligible
+            # when the A role sits on the plan's probe (left) side: the
+            # engine salts the left side and replicates the right, so on
+            # swapped sides the method the model priced is not executable
+            # (the executor would have to degrade it anyway).
+            if (not swapped
+                    and costs[JoinMethod.SALTED_SHUFFLE_HASH] < costs[m]):
+                m = JoinMethod.SALTED_SHUFFLE_HASH
+                why = (f"equi, hashable, skewed (s={ka:.2f}): "
+                       f"C_salted(r={salt_r}) beats plain hash joins")
+                return Selection(m, why, costs[m], costs,
+                                 swapped_sides=swapped, salt_r=salt_r)
             return Selection(m, why, costs[m], costs, swapped_sides=swapped)
         # Lines 10-11: sort join.
         if props.sortable_keys:

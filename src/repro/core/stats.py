@@ -34,11 +34,20 @@ class StatsSource(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class TableStats:
-    """(size, cardinality) of one dataset plus provenance."""
+    """(size, cardinality) of one dataset plus provenance.
+
+    ``skew`` is the *join-key partition skew factor* s =
+    max_partition_load / mean_partition_load of the dataset's join key
+    hashed across p shuffle partitions (s >= 1; 1.0 = uniform). It is a
+    runtime statistic measured at exchange boundaries (per-partition load
+    histograms); statically derived estimates always carry the uniform
+    default — only measurement can establish skew.
+    """
 
     size_bytes: float
     cardinality: float
     source: StatsSource = StatsSource.ESTIMATED
+    skew: float = 1.0
 
     @property
     def row_bytes(self) -> float:
@@ -58,6 +67,10 @@ class TableStats:
 
     def as_runtime(self) -> "TableStats":
         return dataclasses.replace(self, source=StatsSource.RUNTIME)
+
+    def with_skew(self, skew: float) -> "TableStats":
+        """Attach a measured join-key skew factor (clamped to >= 1)."""
+        return dataclasses.replace(self, skew=max(float(skew), 1.0))
 
     def scaled(self, selectivity: float) -> "TableStats":
         """Estimate stats after a filter with the given selectivity.

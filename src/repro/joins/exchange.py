@@ -1,4 +1,5 @@
-"""Data-exchange phase: broadcast and shuffle (paper §2.1.1).
+"""Data-exchange phase: broadcast, shuffle and salted shuffle (paper §2.1.1
+plus the skew-aware extension).
 
 Global-view implementations on stacked ``(p, cap)`` tables. The same
 per-partition send-side logic runs unchanged inside ``shard_map`` in
@@ -8,7 +9,9 @@ the single-device-executable semantic spec of the collectives.
 
 Every exchange returns an ``ExchangeReport`` whose byte counts are *measured*
 (from live rows), so benchmarks can compare the paper's modeled workloads
-(Eqs. 1, 5) against ground truth.
+(Eqs. 1, 5) against ground truth. ``straggler_bytes`` — the load of the
+hottest destination partition, counted with the ``partition_hist`` kernel —
+is the skew signal: under Zipf keys it, not the mean, bounds wall-clock.
 """
 
 from __future__ import annotations
@@ -18,24 +21,52 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..kernels.partition_hist import partition_hist
 from .slots import (SHUFFLE_SEED, gather_rows, hash32, pair_capacity,
                     slot_scatter)
 from .table import Table, concat_partitions
+
+#: Decorrelated from SHUFFLE_SEED/BUCKET_SEED: salt hashing must not undo
+#: the destination hash (murmur3 finalizer constant).
+SALT_SEED = jnp.uint32(0x27D4EB2F)
+
+#: Hot-key detection granularity: nf = HOT_FINE_MULT * p fine hash buckets.
+HOT_FINE_MULT = 16
+
+#: A fine bucket is *hot* when its probe mass alone exceeds this share of a
+#: partition's fair share (total/p) — routing it unsalted would measurably
+#: tilt one partition.
+HOT_PARTITION_SHARE = 0.25
 
 
 @dataclasses.dataclass
 class ExchangeReport:
     """Measured workload of one exchange (host-side ints/floats)."""
 
-    kind: str                  # "broadcast" | "shuffle"
+    kind: str                  # "broadcast" | "shuffle" | "salted_shuffle"
     network_bytes: float       # bytes that crossed partition boundaries
     local_bytes: float         # bytes that stayed partition-local
     overflow_rows: int = 0     # rows dropped by capacity (skew signal)
     elided: bool = False       # exchange skipped (already co-partitioned)
+    straggler_bytes: float = 0.0  # bytes landing on the hottest partition
 
 
 def _dest_partition(key: jax.Array, p: int) -> jax.Array:
     return (hash32(key, SHUFFLE_SEED) % jnp.uint32(p)).astype(jnp.int32)
+
+
+def _fine_bucket(key: jax.Array, nf: int) -> jax.Array:
+    """Fine hash bucket of a key. With nf a multiple of p, h % nf refines
+    h % p exactly: every fine bucket maps wholly into one partition."""
+    return (hash32(key, SHUFFLE_SEED) % jnp.uint32(nf)).astype(jnp.int32)
+
+
+def _salted_dest(key: jax.Array, salt: jax.Array, p: int) -> jax.Array:
+    """Destination of a (key, salt) pair. Deterministic in both, and salt 0
+    reproduces the plain shuffle destination, so cold (unsalted) rows land
+    exactly where ``shuffle`` would send them."""
+    h = hash32(key, SHUFFLE_SEED) + hash32(salt, SALT_SEED)
+    return (h % jnp.uint32(p)).astype(jnp.int32)
 
 
 def broadcast(table: Table) -> tuple[Table, ExchangeReport]:
@@ -44,6 +75,8 @@ def broadcast(table: Table) -> tuple[Table, ExchangeReport]:
     Global view: returns the concatenated unstacked table (each local join
     task consumes it with in_axes=None == a replica). Network workload is
     Eq. 1's (p-1)|B|: each of p tasks fetches the (p-1)/p it doesn't hold.
+    Broadcast is skew-invariant: every partition ends up with identical
+    load, so the straggler equals the replica size.
     """
     if not table.stacked:
         raise ValueError("broadcast expects a stacked table")
@@ -53,17 +86,55 @@ def broadcast(table: Table) -> tuple[Table, ExchangeReport]:
     bytes_all = rows * full.row_bytes
     report = ExchangeReport("broadcast",
                             network_bytes=(p - 1) * bytes_all,
-                            local_bytes=bytes_all)
+                            local_bytes=bytes_all,
+                            straggler_bytes=float(bytes_all))
     return full, report
+
+
+def _exchange_by_dest(table: Table, dest: jax.Array, pair_cap: int,
+                      partitioned_by: str | None, kind: str = "shuffle"
+                      ) -> tuple[Table, ExchangeReport]:
+    """Slotted all-to-all by explicit per-row destinations.
+
+    Each source partition packs rows into per-destination slots of fixed
+    capacity; the (p_src, p_dst, cap) buffer is exchanged (global view: a
+    transpose) and flattened to (p_dst, p_src*cap). Network workload is
+    *measured*: bytes of rows whose destination differs from their source;
+    the straggler is the hottest destination's landed bytes (partition_hist
+    bincount of the destination ids).
+    """
+    p = table.num_partitions
+    scat = jax.vmap(lambda d, v: slot_scatter(d, v, p, pair_cap))(
+        dest, table.valid)  # idx: (p_src, p_dst, pair_cap)
+
+    send_cols, send_valid = jax.vmap(gather_rows)(table.columns, scat.idx)
+    # all_to_all == axis transpose in the global view.
+    recv_cols = {n: jnp.swapaxes(c, 0, 1).reshape(p, p * pair_cap)
+                 for n, c in send_cols.items()}
+    recv_valid = jnp.swapaxes(send_valid, 0, 1).reshape(p, p * pair_cap)
+    out = Table(recv_cols, recv_valid, partitioned_by=partitioned_by)
+
+    # Measured workload: rows that actually crossed partitions, plus the
+    # per-destination load histogram for straggler accounting.
+    src_ids = jnp.arange(p, dtype=jnp.int32)[:, None]
+    moved = jnp.sum(table.valid & (dest != src_ids))
+    stayed = jnp.sum(table.valid & (dest == src_ids))
+    loads = partition_hist(
+        jnp.where(table.valid, dest, -1).reshape(-1), nd=p)
+    rb = table.row_bytes
+    report = ExchangeReport(
+        kind,
+        network_bytes=float(moved) * rb,
+        local_bytes=float(stayed) * rb,
+        overflow_rows=int(jnp.sum(scat.overflow)),
+        straggler_bytes=float(jnp.max(loads)) * rb,
+    )
+    return out, report
 
 
 def shuffle(table: Table, key: str, capacity_factor: float = 2.0
             ) -> tuple[Table, ExchangeReport]:
     """Shuffle exchange: repartition rows by hash(key) across p partitions.
-
-    Slotted all-to-all: each source partition packs rows into per-destination
-    slots of fixed capacity; the (p_src, p_dst, cap) buffer is exchanged
-    (global view: a transpose) and flattened to (p_dst, p_src*cap).
 
     Network workload is *measured*: bytes of rows whose destination differs
     from their source (Eq. 5 models this as ((p-1)/p)(|A|+|B|)).
@@ -76,27 +147,107 @@ def shuffle(table: Table, key: str, capacity_factor: float = 2.0
         return table, ExchangeReport("shuffle", 0.0, 0.0, elided=True)
     p, cap = table.num_partitions, table.capacity
     pair_cap = pair_capacity(cap, p, capacity_factor)
-
     dest = _dest_partition(table.column(key), p)  # (p, cap)
-    scat = jax.vmap(lambda d, v: slot_scatter(d, v, p, pair_cap))(
-        dest, table.valid)  # idx: (p_src, p_dst, pair_cap)
+    return _exchange_by_dest(table, dest, pair_cap, key)
 
-    send_cols, send_valid = jax.vmap(gather_rows)(table.columns, scat.idx)
-    # all_to_all == axis transpose in the global view.
-    recv_cols = {n: jnp.swapaxes(c, 0, 1).reshape(p, p * pair_cap)
-                 for n, c in send_cols.items()}
-    recv_valid = jnp.swapaxes(send_valid, 0, 1).reshape(p, p * pair_cap)
-    out = Table(recv_cols, recv_valid, partitioned_by=key)
 
-    # Measured workload: rows that actually crossed partitions.
-    src_ids = jnp.arange(p, dtype=jnp.int32)[:, None]
-    moved = jnp.sum(table.valid & (dest != src_ids))
-    stayed = jnp.sum(table.valid & (dest == src_ids))
-    rb = table.row_bytes
-    report = ExchangeReport(
-        "shuffle",
-        network_bytes=float(moved) * rb,
-        local_bytes=float(stayed) * rb,
-        overflow_rows=int(jnp.sum(scat.overflow)),
-    )
-    return out, report
+# ---------------------------------------------------------------------------
+# Skew mitigation: salted shuffle (hot-key spreading + build replication).
+# ---------------------------------------------------------------------------
+
+
+def hot_fine_buckets(table: Table, key: str, nf: int, p: int,
+                     hot_share: float = HOT_PARTITION_SHARE
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Hot-bucket mask of ``table``'s key column.
+
+    Bucket mass comes from the ``partition_hist`` kernel over nf fine hash
+    buckets; a bucket is hot when its mass alone exceeds ``hot_share`` of a
+    partition's fair share (total/p). On uniform keys no bucket comes close
+    (fine means are total/nf = total/(16p)), so nothing is salted.
+
+    Returns ``(hot, fine)``: the boolean (nf,) mask and the key column's own
+    fine-bucket ids (so the caller need not re-hash the hot table).
+    """
+    fine = _fine_bucket(table.column(key), nf)
+    counts = partition_hist(jnp.where(table.valid, fine, -1).reshape(-1),
+                            nd=nf)
+    threshold = hot_share * jnp.sum(counts) / p
+    return counts > threshold, fine
+
+
+def salted_shuffle(a: Table, a_key: str, b: Table, b_key: str, r: int,
+                   capacity_factor: float = 2.0,
+                   fine_mult: int = HOT_FINE_MULT,
+                   hot_share: float = HOT_PARTITION_SHARE
+                   ) -> tuple[Table, Table, ExchangeReport, ExchangeReport]:
+    """Skew-mitigating co-shuffle of probe side A and build side B.
+
+    Hot keys are detected at fine-hash-bucket granularity from A's key
+    histogram. Hot probe rows get a deterministic salt in [0, r) — spreading
+    each hot key over r destinations — while build rows whose key falls in a
+    hot bucket are replicated once per salt value, so every destination a
+    salted probe row can reach holds the matching build row. Cold rows keep
+    salt 0, whose destination equals the plain shuffle destination.
+
+    Hotness is a pure function of the key (via A's histogram) applied
+    identically on both sides: a probe row is salted iff its build match is
+    replicated, which is exactly the agreement the join needs.
+    """
+    if not (a.stacked and b.stacked):
+        raise ValueError("salted_shuffle expects stacked tables")
+    p = a.num_partitions
+    r = max(2, int(r))
+    nf = fine_mult * p
+    hot, a_fine = hot_fine_buckets(a, a_key, nf, p, hot_share)
+
+    # Probe: deterministic per-row salt for hot rows (round-robin within the
+    # source partition, offset by the partition id to decorrelate sources).
+    ak = a.column(a_key)
+    a_hot = jnp.take(hot, a_fine)
+    row = jax.lax.broadcasted_iota(jnp.int32, ak.shape, 1)
+    src = jax.lax.broadcasted_iota(jnp.int32, ak.shape, 0)
+    salt_a = jnp.where(a_hot, (row + src) % r, 0).astype(jnp.int32)
+    a_sh, ex_a = _exchange_by_dest(
+        a, _salted_dest(ak, salt_a, p),
+        pair_capacity(a.capacity, p, capacity_factor),
+        None, kind="salted_shuffle")
+
+    # Build: replicate along the capacity axis; replica j of a row is live
+    # iff j == 0 (the plain copy) or the row's key is hot. Replicas of the
+    # same key landing on one partition leave duplicate build keys there —
+    # harmless for FK->PK joins (identical payload, first match wins).
+    bk = b.column(b_key)
+    b_hot = jnp.take(hot, _fine_bucket(bk, nf))
+    cap_b = b.capacity
+    salt_b = jnp.repeat(jnp.arange(r, dtype=jnp.int32), cap_b)[None, :]
+    wide_valid = (jnp.tile(b.valid, (1, r))
+                  & ((salt_b == 0) | jnp.tile(b_hot, (1, r))))
+    b_wide = Table({n: jnp.tile(c, (1, r)) for n, c in b.columns.items()},
+                   wide_valid)
+    dest_b = _salted_dest(jnp.tile(bk, (1, r)),
+                          jnp.broadcast_to(salt_b, wide_valid.shape), p)
+    b_sh, ex_b = _exchange_by_dest(
+        b_wide, dest_b, pair_capacity(cap_b, p, capacity_factor),
+        None, kind="salted_shuffle")
+    return a_sh, b_sh, ex_a, ex_b
+
+
+def key_skew(table: Table, key: str, p: int | None = None,
+             floor: float = 1.1) -> float:
+    """Measured straggler factor of hash-partitioning ``table`` by ``key``:
+    s = max_partition_load / mean_partition_load over p destinations
+    (partition_hist bincount of the would-be shuffle destinations).
+
+    Values below ``floor`` are statistical fluctuation of uniform hashing
+    and snap to 1.0, so skew-aware selection on uniform data reproduces the
+    paper's Algorithm 1 decisions exactly.
+    """
+    p = p or table.num_partitions
+    dest = jnp.where(table.valid, _dest_partition(table.column(key), p), -1)
+    counts = partition_hist(dest.reshape(-1), nd=p)
+    total = int(jnp.sum(counts))
+    if total == 0:
+        return 1.0
+    s = float(jnp.max(counts)) * p / total
+    return s if s >= floor else 1.0

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.cost_model import JoinMethod
-from .exchange import ExchangeReport, broadcast, shuffle
+from .exchange import ExchangeReport, broadcast, salted_shuffle, shuffle
 from .local_join import hash_join, nested_loop_join, sort_join
 from .slots import gather_rows
 from .table import Table
@@ -125,6 +125,38 @@ def shuffle_hash_join(a: Table, b: Table, a_key: str, b_key: str,
     return out, rep
 
 
+def salted_shuffle_hash_join(a: Table, b: Table, a_key: str, b_key: str,
+                             join_type: str = "inner",
+                             salt_r: int = 2,
+                             capacity_factor: float = 2.0,
+                             use_kernel: bool = False
+                             ) -> tuple[Table, JoinReport]:
+    """Skew-mitigating shuffle hash join: salt hot probe keys over ``salt_r``
+    destinations and replicate the matching build rows once per salt, then
+    radix-hash join each co-partition like the plain shuffle hash join.
+
+    The output is NOT hash-partitioned by the join key (it is partitioned by
+    (key, salt)), so downstream shuffles on the key are not elided — the
+    price of flattening the straggler, and exactly what the salted cost
+    model's replication surcharge pays for.
+    """
+    p = a.num_partitions
+    a_sh, b_sh, ex_a, ex_b = salted_shuffle(a, a_key, b, b_key, salt_r,
+                                            capacity_factor)
+    res = jax.vmap(
+        lambda ak, av, bk, bv: hash_join(ak, av, bk, bv,
+                                         use_kernel=use_kernel)
+    )(a_sh.column(a_key), a_sh.valid, b_sh.column(b_key), b_sh.valid)
+    out = _finish(a_sh, b_sh.columns, b_sh.valid, res, join_type, b_key,
+                  vmap_b=True)
+    out.partitioned_by = None
+    rep = JoinReport(JoinMethod.SALTED_SHUFFLE_HASH, [ex_a, ex_b],
+                     _local_bytes(a_sh, b_sh.count(), b_sh.row_bytes, p,
+                                  build_replicated=False),
+                     out.count())
+    return out, rep
+
+
 def shuffle_sort_join(a: Table, b: Table, a_key: str, b_key: str,
                       join_type: str = "inner",
                       capacity_factor: float = 2.0,
@@ -211,6 +243,7 @@ def cartesian_join(a: Table, b: Table,
 EQUI_METHODS = {
     JoinMethod.BROADCAST_HASH: broadcast_hash_join,
     JoinMethod.SHUFFLE_HASH: shuffle_hash_join,
+    JoinMethod.SALTED_SHUFFLE_HASH: salted_shuffle_hash_join,
     JoinMethod.SHUFFLE_SORT: shuffle_sort_join,
 }
 
@@ -218,7 +251,8 @@ EQUI_METHODS = {
 def run_equi_join(method: JoinMethod, a: Table, b: Table, a_key: str,
                   b_key: str, join_type: str = "inner",
                   use_kernel: bool = False,
-                  capacity_factor: float = 2.0) -> tuple[Table, JoinReport]:
+                  capacity_factor: float = 2.0,
+                  salt_r: int = 2) -> tuple[Table, JoinReport]:
     """Dispatch an equi-join to the selected physical method."""
     if method in (JoinMethod.BROADCAST_NL, JoinMethod.CARTESIAN):
         pred = lambda ac, bc: ac[a_key] == bc[b_key]  # noqa: E731
@@ -230,6 +264,10 @@ def run_equi_join(method: JoinMethod, a: Table, b: Table, a_key: str,
     if method is JoinMethod.SHUFFLE_HASH:
         return shuffle_hash_join(a, b, a_key, b_key, join_type,
                                  capacity_factor, use_kernel)
+    if method is JoinMethod.SALTED_SHUFFLE_HASH:
+        # salt_r < 2 (e.g. a bare hint) is clamped inside salted_shuffle.
+        return salted_shuffle_hash_join(a, b, a_key, b_key, join_type,
+                                        salt_r, capacity_factor, use_kernel)
     if method is JoinMethod.SHUFFLE_SORT:
         return shuffle_sort_join(a, b, a_key, b_key, join_type,
                                  capacity_factor, use_kernel)

@@ -16,7 +16,9 @@ def ref_equi_join(a_cols: Dict[str, np.ndarray], b_cols: Dict[str, np.ndarray],
     assert len(np.unique(bk)) == len(bk), "oracle requires unique build keys"
     lookup = {int(k): i for i, k in enumerate(bk)}
     ak = a_cols[a_key]
-    idx = np.asarray([lookup.get(int(k), -1) for k in ak])
+    # Explicit dtype: an empty probe side would otherwise produce a float64
+    # index array, which numpy rejects as an index.
+    idx = np.asarray([lookup.get(int(k), -1) for k in ak], dtype=np.int64)
     found = idx >= 0
 
     if join_type == "left_semi":

@@ -8,15 +8,18 @@ from .logical import (Aggregate, Filter, Join, JoinEdge, JoinGraph, Node,
                       Project, Scan, extract_join_graph)
 from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
                       optimize, prune_projections, push_down_filters)
-from .queries import all_queries, every_query, misordered_queries
+from .queries import (all_queries, every_query, misordered_queries,
+                      skewed_queries)
 from .strategies import (AQEStrategy, ForcedStrategy, RelJoinStrategy,
-                         ReorderingStrategy, Strategy, default_strategies)
+                         ReorderingStrategy, SkewAwareStrategy, Strategy,
+                         default_strategies)
 
 __all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
            "JoinDecision", "Aggregate", "Filter", "Join", "JoinEdge",
            "JoinGraph", "Node", "Project", "Scan", "extract_join_graph",
            "OptimizedPlan", "enumerate_join_order", "modeled_tree_cost",
            "optimize", "prune_projections", "push_down_filters",
-           "all_queries", "every_query", "misordered_queries", "AQEStrategy",
-           "ForcedStrategy", "RelJoinStrategy", "ReorderingStrategy",
+           "all_queries", "every_query", "misordered_queries",
+           "skewed_queries", "AQEStrategy", "ForcedStrategy",
+           "RelJoinStrategy", "ReorderingStrategy", "SkewAwareStrategy",
            "Strategy", "default_strategies"]

@@ -60,10 +60,20 @@ FACTS = ("store_sales", "catalog_sales", "inventory")
 
 
 def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
-             skew: float = 0.0) -> Catalog:
+             skew: float = 0.0,
+             skew_overrides: Dict[str, float] | None = None) -> Catalog:
+    """Build the catalog. ``skew`` is the global Zipf exponent of every fact
+    FK column; ``skew_overrides`` overrides it per column (e.g.
+    ``{"ss_customer_sk": 1.4}`` makes only the customer key hot), letting
+    the skewed queries (q16-q18) tilt exactly the join they target.
+    """
     rng = np.random.default_rng(seed)
     n = {t: max(8, int(r * scale)) if t in FACTS else r
          for t, r in SCHEMA.items()}
+    overrides = skew_overrides or {}
+
+    def fks(col: str, nrows: int, dim: str):
+        return _zipf_fks(rng, nrows, n[dim], overrides.get(col, skew))
 
     def dim(name, pk, extra):
         cols = {pk: np.arange(n[name], dtype=np.int32)}
@@ -104,29 +114,29 @@ def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
 
     nf = n["store_sales"]
     tables["store_sales"] = from_numpy({
-        "ss_item_sk": _zipf_fks(rng, nf, n["item"], skew),
-        "ss_store_sk": _zipf_fks(rng, nf, n["store"], skew),
-        "ss_customer_sk": _zipf_fks(rng, nf, n["customer"], skew),
-        "ss_sold_date_sk": _zipf_fks(rng, nf, n["date_dim"], skew),
-        "ss_promo_sk": _zipf_fks(rng, nf, n["promotion"], skew),
+        "ss_item_sk": fks("ss_item_sk", nf, "item"),
+        "ss_store_sk": fks("ss_store_sk", nf, "store"),
+        "ss_customer_sk": fks("ss_customer_sk", nf, "customer"),
+        "ss_sold_date_sk": fks("ss_sold_date_sk", nf, "date_dim"),
+        "ss_promo_sk": fks("ss_promo_sk", nf, "promotion"),
         "ss_quantity": rng.integers(1, 100, nf).astype(np.int32),
         "ss_sales_price": rng.uniform(1, 300, nf).astype(np.float32),
         "ss_net_profit": rng.uniform(-50, 150, nf).astype(np.float32),
     })
     nc = n["catalog_sales"]
     tables["catalog_sales"] = from_numpy({
-        "cs_item_sk": _zipf_fks(rng, nc, n["item"], skew),
-        "cs_ship_date_sk": _zipf_fks(rng, nc, n["date_dim"], skew),
-        "cs_bill_customer_sk": _zipf_fks(rng, nc, n["customer"], skew),
-        "cs_warehouse_sk": _zipf_fks(rng, nc, n["warehouse"], skew),
+        "cs_item_sk": fks("cs_item_sk", nc, "item"),
+        "cs_ship_date_sk": fks("cs_ship_date_sk", nc, "date_dim"),
+        "cs_bill_customer_sk": fks("cs_bill_customer_sk", nc, "customer"),
+        "cs_warehouse_sk": fks("cs_warehouse_sk", nc, "warehouse"),
         "cs_quantity": rng.integers(1, 100, nc).astype(np.int32),
         "cs_sales_price": rng.uniform(1, 300, nc).astype(np.float32),
     })
     ni = n["inventory"]
     tables["inventory"] = from_numpy({
-        "inv_item_sk": _zipf_fks(rng, ni, n["item"], skew),
-        "inv_date_sk": _zipf_fks(rng, ni, n["date_dim"], skew),
-        "inv_warehouse_sk": _zipf_fks(rng, ni, n["warehouse"], skew),
+        "inv_item_sk": fks("inv_item_sk", ni, "item"),
+        "inv_date_sk": fks("inv_date_sk", ni, "date_dim"),
+        "inv_warehouse_sk": fks("inv_warehouse_sk", ni, "warehouse"),
         "inv_quantity_on_hand": rng.integers(0, 1000, ni).astype(np.int32),
     })
 

@@ -26,6 +26,7 @@ from ..core.selection import JoinProperties, JoinType, Selection
 from ..core.stats import (StatsSource, TableStats, estimate_filter,
                           estimate_group_by, estimate_join)
 from ..joins.aggregate import group_aggregate
+from ..joins.exchange import key_skew
 from ..joins.methods import JoinReport, run_equi_join
 from ..joins.table import Table, compact_partitions
 from .datagen import Catalog
@@ -53,6 +54,13 @@ class JoinDecision:
     def local_bytes(self) -> float:
         return self.report.local_bytes
 
+    @property
+    def straggler_bytes(self) -> float:
+        """Hottest-partition load of this join's exchanges (both sides must
+        land before the local join starts, so the stage's straggler is the
+        sum of the per-exchange straggler loads)."""
+        return sum(e.straggler_bytes for e in self.report.exchanges)
+
 
 @dataclasses.dataclass
 class ExecutionResult:
@@ -62,6 +70,9 @@ class ExecutionResult:
     network_bytes: float
     local_bytes: float
     rows: int
+    #: Sum over joins of their hottest-partition exchange loads — the
+    #: skew-sensitive lower bound on stage wall time (straggler metric).
+    straggler_bytes: float = 0.0
 
     def methods(self):
         return [d.selection.method for d in self.decisions]
@@ -95,6 +106,11 @@ class Executor:
         # reorder=True) to enable pushdown/pruning + adaptive join reordering.
         self.reorder = (getattr(strategy, "reorder", False)
                         if reorder is None else reorder)
+        # Skew-aware strategies get runtime key-skew measurements attached
+        # to the boundary statistics (everyone else sees the uniform 1.0,
+        # keeping the paper's strategies bit-identical and measurement-free).
+        self.skew_aware = getattr(strategy, "skew_aware", False)
+        self.skew_floor = getattr(strategy, "skew_floor", 1.1)
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
 
@@ -111,8 +127,9 @@ class Executor:
         dt = time.perf_counter() - t0
         net = sum(d.network_bytes for d in self._decisions)
         loc = sum(d.local_bytes for d in self._decisions)
+        strag = sum(d.straggler_bytes for d in self._decisions)
         return ExecutionResult(ann.table, self._decisions, dt, net, loc,
-                               ann.table.count())
+                               ann.table.count(), straggler_bytes=strag)
 
     # -- evaluation ------------------------------------------------------------
 
@@ -178,6 +195,20 @@ class Executor:
               join_type: JoinType, hint) -> _Annotated:
         """Select (per strategy) + execute one physical join; audit it."""
         props = JoinProperties(join_type=join_type, hint=hint)
+        if self.skew_aware:
+            # Adaptive runtime statistic beyond (size, cardinality): the
+            # join-key straggler factor from per-partition load histograms.
+            # A side already hash-partitioned by its join key keeps the
+            # uniform default: its shuffle would be *elided* (§3.7's
+            # C_shuffle = 0 case), so charging a straggler — or salting,
+            # which un-elides the exchange — would regress exactly the
+            # plans the elision optimizes.
+            if left.table.partitioned_by != lk:
+                lstats = lstats.with_skew(
+                    key_skew(left.table, lk, self.p, self.skew_floor))
+            if right.table.partitioned_by != rk:
+                rstats = rstats.with_skew(
+                    key_skew(right.table, rk, self.p, self.skew_floor))
         sel = self.strategy.select(lstats, rstats, props, self.p)
         sel = self._engine_feasible(sel, lstats, rstats, props)
         out, rep = self._run_join_with_retry(sel, left.table, right.table,
@@ -204,6 +235,9 @@ class Executor:
             return dataclasses.replace(
                 sel, method=JoinMethod.SHUFFLE_HASH,
                 reason=sel.reason + "; engine: build side larger -> shuffle")
+        # (The salted method needs no twin guard: selection only emits it
+        # when the A role sits on the plan's left — the side the engine
+        # actually salts.)
         return sel
 
     # -- adaptive join reordering (planner DP at exchange boundaries) ----------
@@ -309,7 +343,8 @@ class Executor:
         for _ in range(self.MAX_CAPACITY_RETRIES):
             out, rep = run_equi_join(sel.method, left, right, lk, rk,
                                      join_type=jt, use_kernel=self.use_kernel,
-                                     capacity_factor=factor)
+                                     capacity_factor=factor,
+                                     salt_r=sel.salt_r)
             if all(e.overflow_rows == 0 for e in rep.exchanges):
                 return out, rep
             factor *= 2

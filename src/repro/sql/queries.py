@@ -184,8 +184,55 @@ def misordered_queries() -> Dict[str, Node]:
     }
 
 
+# ---------------------------------------------------------------------------
+# Skewed queries (skew-aware selection targets): each centers on a
+# fact x large-dim join in shuffle territory (k < k0) whose fact-side FK is
+# Zipf-hot when the catalog is generated with skew > 0. Under uniform keys
+# these are ordinary shuffle-hash joins; under Zipf >= ~1.2 the straggler
+# cost makes SkewAwareStrategy switch them to SALTED_SHUFFLE_HASH. Run them
+# against ``generate(..., skew=z)`` catalogs (bench_skew sweeps z).
+# ---------------------------------------------------------------------------
+
+
+def q16_hot_customer() -> Node:
+    """The canonical skew target: fact x customer (k ~ 1.7 << k0) with a
+    Zipf-hot ss_customer_sk — one hot customer draws ~20% of the fact."""
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    return Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
+
+
+def q17_hot_customer_star() -> Node:
+    """Skewed shuffle join feeding a reporting star: the hot customer join
+    runs first (maximum straggler exposure), then two broadcast dims whose
+    skew-invariant costs must NOT change under skew."""
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, Scan("store"), "ss_store_sk", "s_store_sk")
+    j = Join(j, Filter(Scan("date_dim"), "d_month", "eq", 6,
+                       selectivity=1 / 12), "ss_sold_date_sk", "d_date_sk")
+    return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
+
+
+def q18_hot_catalog_customer() -> Node:
+    """Catalog-channel variant: the date join first widens the fact rows
+    (so the probe side is the larger one at every scale), then the
+    Zipf-hot cs_bill_customer_sk shuffle join hits the straggler."""
+    j = Join(_cs(), Scan("date_dim"), "cs_ship_date_sk", "d_date_sk")
+    j = Join(j, Scan("customer"), "cs_bill_customer_sk", "c_customer_sk")
+    return Aggregate(j, "c_region", (("cs_sales_price", "sum"),))
+
+
+def skewed_queries() -> Dict[str, Node]:
+    return {
+        "q16_hot_customer": q16_hot_customer(),
+        "q17_hot_customer_star": q17_hot_customer_star(),
+        "q18_hot_catalog_customer": q18_hot_catalog_customer(),
+    }
+
+
 def every_query() -> Dict[str, Node]:
-    """The 12 baseline plans plus the 3 mis-ordered planner targets."""
+    """The 12 baseline plans plus the 3 mis-ordered planner targets.
+    (The skewed q16-q18 are separate: they only bite on skewed catalogs —
+    see ``skewed_queries()`` and benchmarks/bench_skew.py.)"""
     out = all_queries()
     out.update(misordered_queries())
     return out

@@ -15,6 +15,11 @@ class Strategy:
     #: When True the Executor runs the planner: pushdown + pruning rewrites
     #: and adaptive cost-based join reordering (System-R DP per region).
     reorder: bool = False
+    #: When True the Executor measures the join-key partition skew of both
+    #: inputs at every exchange boundary (partition_hist histograms) and
+    #: attaches it to the runtime statistics, enabling the straggler-aware
+    #: costs and the salted shuffle method.
+    skew_aware: bool = False
 
     def select(self, left: TableStats, right: TableStats,
                props: JoinProperties, p: int) -> Selection:
@@ -30,6 +35,34 @@ class RelJoinStrategy(Strategy):
 
     def __post_init__(self):
         self.name = f"RelJoin(w={self.w:g})"
+
+    def select(self, left, right, props, p):
+        return select_join_method(left, right, props, CostParams(p=p, w=self.w),
+                                  watermark_bytes=self.watermark_bytes)
+
+
+@dataclasses.dataclass
+class SkewAwareStrategy(Strategy):
+    """RelJoin's Algorithm 1 on skew-annotated runtime statistics.
+
+    Method selection is exactly :func:`select_join_method`; the difference
+    is in the statistics: the Executor, seeing ``skew_aware=True``, measures
+    the join-key straggler factor s = max/mean partition load of both inputs
+    at every exchange boundary. Shuffle-family costs then inflate by s,
+    which (a) shifts the broadcast/shuffle threshold to k0(s) and (b) lets
+    the SALTED_SHUFFLE_HASH method win when plain shuffle would straggle.
+    At s = 1 (uniform keys, or fluctuation below ``skew_floor``) every
+    selection is byte-for-byte the one RelJoinStrategy makes.
+    """
+
+    w: float = 1.0
+    watermark_bytes: float = DEFAULT_WATERMARK_BYTES
+    #: Measured skew below this is hashing noise and snaps to 1.0.
+    skew_floor: float = 1.1
+
+    def __post_init__(self):
+        self.name = f"SkewAware(w={self.w:g})"
+        self.skew_aware = True
 
     def select(self, left, right, props, p):
         return select_join_method(left, right, props, CostParams(p=p, w=self.w),
@@ -87,6 +120,10 @@ class ReorderingStrategy(Strategy):
     def __post_init__(self):
         self.name = f"Reorder({self.inner.name})"
         self.reorder = True
+        # Forward the wrapped strategy's executor-facing flags: without
+        # these, Reorder(SkewAware(...)) would silently lose skew handling.
+        self.skew_aware = getattr(self.inner, "skew_aware", False)
+        self.skew_floor = getattr(self.inner, "skew_floor", 1.1)
         if self.w is None:
             self.w = getattr(self.inner, "w", 1.0)
 

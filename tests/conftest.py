@@ -23,3 +23,12 @@ def skewed_catalogs():
 @pytest.fixture(scope="session")
 def strategies():
     return default_strategies()
+
+
+@pytest.fixture(scope="session")
+def zipf_catalogs():
+    """{zipf_exponent: catalog} at p=8 for the skew-aware suite (read-only).
+    p=8 (vs the standard fixture's p=4) gives the hot key enough partitions
+    to tilt: the straggler factor at Zipf 1.2 is ~2x there."""
+    return {z: generate(scale=0.1, p=8, seed=11, skew=z)
+            for z in (0.0, 1.2, 1.4)}

@@ -10,9 +10,9 @@ import pytest
 from repro.core.cost_model import CostParams
 from repro.core.stats import TableStats
 from repro.joins.ref import rows_as_set, rows_close
-from repro.sql import (Executor, RelJoinStrategy, ReorderingStrategy,
-                       all_queries, every_query, extract_join_graph,
-                       misordered_queries, optimize)
+from repro.sql import (Aggregate, Executor, Filter, Join, RelJoinStrategy,
+                       ReorderingStrategy, Scan, all_queries, every_query,
+                       extract_join_graph, misordered_queries, optimize)
 from repro.sql.logical import JoinEdge, augment_edges, leaf_retain_fraction
 from repro.sql.planner import (catalog_schema, enumerate_join_order,
                                estimate_leaf_stats, modeled_tree_cost, _step)
@@ -173,3 +173,59 @@ def test_misordered_queries_network_improves(catalog):
         re = Executor(catalog,
                       ReorderingStrategy(RelJoinStrategy())).execute(plan)
         assert re.network_bytes < plain.network_bytes, qname
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: single join, tie-breaking determinism, empty intermediates
+# ---------------------------------------------------------------------------
+
+def test_single_join_query_not_reordered(catalog):
+    """A 2-relation region has nothing to reorder: optimize() must report no
+    region decision and the reordering executor must match the plain one."""
+    plan = Aggregate(Join(Scan("store_sales"), Scan("item"),
+                          "ss_item_sk", "i_item_sk"),
+                     "i_brand", (("ss_sales_price", "sum"),))
+    res = optimize(plan, catalog)
+    assert res.regions == [] and not res.reordered
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    opt = Executor(catalog, ReorderingStrategy(RelJoinStrategy())
+                   ).execute(plan)
+    assert base.rows == opt.rows
+    # Exactly one join either way (no region splitting/ordering artifacts);
+    # the *method* may differ — pruning narrows rows, moving k vs k0.
+    assert len(base.decisions) == len(opt.decisions) == 1
+    assert rows_close(_result_rows(opt), _result_rows(base))
+
+
+def test_dp_tie_break_deterministic():
+    """When every candidate order costs the same (identical dimensions),
+    the DP must keep the first-found state — repeated enumerations return
+    the identical order, never a cost-equal sibling."""
+    stats = [_stats(4000, 50_000)] + [_stats(40, 500)] * 3
+    retain = [1.0, 1.0, 1.0, 1.0]
+    edges = [JoinEdge(0, i, f"k{i}", f"pk{i}") for i in (1, 2, 3)]
+    first = enumerate_join_order(stats, retain, edges, P)
+    assert first is not None
+    for _ in range(3):
+        again = enumerate_join_order(stats, list(retain), list(edges), P)
+        assert again.order() == first.order()
+        assert again.cost == first.cost
+    # strict-improvement updates keep the lexicographically first extension
+    assert first.order() == [0, 1, 2, 3]
+
+
+def test_replanning_with_empty_intermediate(catalog):
+    """Adaptive re-planning must survive a mid-pipeline empty intermediate:
+    a predicate selecting nothing empties the region after its first join;
+    every remaining step then re-enumerates with zero-row statistics."""
+    j = Join(Scan("store_sales"),
+             Filter(Scan("date_dim"), "d_year", "eq", 1900,
+                    selectivity=0.01),  # no 1900 dates exist -> 0 rows
+             "ss_sold_date_sk", "d_date_sk")
+    j = Join(j, Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, Scan("store"), "ss_store_sk", "s_store_sk")
+    plan = Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
+    for strat in (RelJoinStrategy(), ReorderingStrategy(RelJoinStrategy())):
+        res = Executor(catalog, strat).execute(plan)
+        assert res.rows == 0, strat.name
+        assert len(res.decisions) == 3, strat.name

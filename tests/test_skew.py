@@ -1,0 +1,249 @@
+"""Skew-aware join selection tests: the straggler cost model, the measured
+skew statistic, salted-method selection on the skewed queries (q16-q18),
+straggler-byte reduction vs RelJoin, skew-0 parity, and the executor's
+overflow-retry regression under Zipf-1.4 hot partitions."""
+
+import math
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import CostParams, JoinMethod
+from repro.core.selection import JoinProperties, select_join_method
+from repro.core.stats import TableStats
+from repro.joins.exchange import key_skew, shuffle
+from repro.joins.ref import rows_as_set, rows_close
+from repro.sql import (Executor, ForcedStrategy, RelJoinStrategy,
+                       ReorderingStrategy, SkewAwareStrategy, generate,
+                       skewed_queries)
+
+P8 = CostParams(p=8, w=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cost model: straggler scaling
+# ---------------------------------------------------------------------------
+
+def test_skewed_shuffle_costs_reduce_to_paper_at_one():
+    sa, sb, ca, cb = 1000.0, 300.0, 7000.0, 1400.0
+    assert (cm.shuffle_hash_cost(sa, sb, P8, 1.0, 1.0)
+            == cm.shuffle_hash_cost(sa, sb, P8))
+    assert (cm.shuffle_sort_cost(sa, sb, ca, cb, P8, 1.0, 1.0)
+            == cm.shuffle_sort_cost(sa, sb, ca, cb, P8))
+
+
+def test_shuffle_costs_monotone_in_skew():
+    sa, sb = 1000.0, 300.0
+    prev = 0.0
+    for s in (1.0, 1.5, 2.0, 4.0):
+        c = cm.shuffle_hash_cost(sa, sb, P8, skew_a=s)
+        assert c > prev
+        prev = c
+    # Broadcast-family costs are skew-invariant by construction.
+    for s in (1.0, 2.0, 4.0):
+        assert (cm.method_cost(JoinMethod.BROADCAST_HASH, sa, sb, 100, 30,
+                               P8, skew_a=s)
+                == cm.broadcast_hash_cost(sa, sb, P8))
+
+
+def test_salted_strictly_worse_without_skew():
+    """At skew 1 the replication surcharge buys nothing: Algorithm 1 must
+    never pick the salted method on uniform statistics."""
+    for sa, sb in ((1000.0, 300.0), (5000.0, 100.0), (100.0, 100.0)):
+        assert (cm.salted_shuffle_hash_cost(sa, sb, P8, skew_a=1.0)
+                > cm.shuffle_hash_cost(sa, sb, P8))
+
+
+def test_salted_wins_under_enough_skew():
+    sa, sb = 1000.0, 300.0
+    s = 2.5
+    assert (cm.salted_shuffle_hash_cost(sa, sb, P8, skew_a=s)
+            < cm.shuffle_hash_cost(sa, sb, P8, skew_a=s))
+
+
+def test_k0_skew_variant_matches_raw_costs():
+    """k0(s) must agree with the raw C_bh vs C_sh comparison (both sides
+    charged at the straggler), like Eq. 13 does at s=1."""
+    for p in (4, 8, 20):
+        for w in (0.5, 1.0, 2.0):
+            params = CostParams(p=p, w=w)
+            assert cm.k0_threshold(params, 1.0) == cm.k0_threshold(params)
+            for s in (1.0, 1.3, 2.0, 4.0):
+                k0 = cm.k0_threshold(params, s)
+                sb = 1000.0
+                for k in (0.5, 2.0, 10.0, 40.0, 100.0):
+                    if not math.isfinite(k0) or abs(k - k0) < 1e-6 * max(k0, 1):
+                        continue
+                    bh = cm.broadcast_hash_cost(k * sb, sb, params)
+                    sh = cm.shuffle_hash_cost(k * sb, sb, params, s, s)
+                    assert (bh < sh) == (k > k0), (p, w, s, k, k0)
+
+
+def test_k0_drops_with_skew():
+    """Skew makes broadcasting win earlier: k0(s) is decreasing in s."""
+    k0s = [cm.k0_threshold(P8, s) for s in (1.0, 1.5, 2.0, 4.0)]
+    assert all(a > b for a, b in zip(k0s, k0s[1:]))
+
+
+def test_default_salt_factor_bounds():
+    assert cm.default_salt_factor(1.0, P8) == 2
+    assert cm.default_salt_factor(2.9, P8) == 3
+    assert cm.default_salt_factor(50.0, P8) == P8.p  # capped at p
+
+
+# ---------------------------------------------------------------------------
+# Selection: Algorithm 1 extension
+# ---------------------------------------------------------------------------
+
+def _stats(size, skew=1.0):
+    return TableStats(size, size / 32.0, skew=skew)
+
+
+def test_selection_salted_only_under_skew():
+    props = JoinProperties()
+    uniform = select_join_method(_stats(320e3), _stats(190e3), props, P8)
+    assert uniform.method is JoinMethod.SHUFFLE_HASH
+    skewed = select_join_method(_stats(320e3, skew=2.5), _stats(190e3),
+                                props, P8)
+    assert skewed.method is JoinMethod.SALTED_SHUFFLE_HASH
+    assert skewed.salt_r == 3
+    # the full cost table is audited, including the salted entry
+    assert (skewed.costs[JoinMethod.SALTED_SHUFFLE_HASH]
+            < skewed.costs[JoinMethod.SHUFFLE_HASH])
+
+
+def test_selection_no_salting_on_swapped_sides():
+    """The A role landing on the plan's right side makes salting
+    unexecutable (the engine salts left, replicates right): even with a
+    salted-favourable skew there, selection must stay in the paper's set."""
+    sel = select_join_method(_stats(100e3), _stats(300e3, skew=3.0),
+                             JoinProperties(), P8)
+    assert sel.swapped_sides
+    assert sel.method is not JoinMethod.SALTED_SHUFFLE_HASH
+
+
+def test_selection_extreme_skew_flips_to_broadcast():
+    """Skew far beyond what r <= p salt buckets can flatten (s >> p): the
+    residual straggler still loses to the skew-invariant broadcast, even at
+    k below the uniform k0."""
+    params = CostParams(p=8, w=1.0)
+    k = 10.0  # k0(1) = 15 at p=8, w=1
+    assert k < cm.k0_threshold(params)
+    sel = select_join_method(_stats(k * 10e3, skew=20.0), _stats(10e3),
+                             JoinProperties(), params)
+    assert sel.method is JoinMethod.BROADCAST_HASH
+    assert (sel.costs[JoinMethod.SALTED_SHUFFLE_HASH]
+            > sel.costs[JoinMethod.BROADCAST_HASH])
+
+
+# ---------------------------------------------------------------------------
+# Measured skew statistic
+# ---------------------------------------------------------------------------
+
+def test_key_skew_uniform_snaps_to_one(zipf_catalogs):
+    t = zipf_catalogs[0.0].table("store_sales")
+    assert key_skew(t, "ss_customer_sk", 8) == 1.0
+
+
+def test_key_skew_detects_zipf(zipf_catalogs):
+    t = zipf_catalogs[1.2].table("store_sales")
+    s = key_skew(t, "ss_customer_sk", 8)
+    assert s > 1.5
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the skewed queries q16-q18
+# ---------------------------------------------------------------------------
+
+def _rows(res):
+    return rows_as_set(res.table.to_numpy())
+
+
+def test_skew_zero_selections_identical_to_reljoin(zipf_catalogs):
+    """Acceptance: at skew 0 SkewAwareStrategy's selections are
+    byte-for-byte RelJoinStrategy's."""
+    cat = zipf_catalogs[0.0]
+    for qname, plan in skewed_queries().items():
+        base = Executor(cat, RelJoinStrategy()).execute(plan)
+        skew = Executor(cat, SkewAwareStrategy()).execute(plan)
+        assert skew.methods() == base.methods(), qname
+        assert rows_close(_rows(skew), _rows(base)), qname
+
+
+def test_skewed_queries_select_salted_and_cut_straggler(zipf_catalogs):
+    """Acceptance: at Zipf 1.2, every skewed query uses the salted method at
+    least once, preserves results, and lands fewer straggler bytes than
+    RelJoin's plain shuffle plan."""
+    cat = zipf_catalogs[1.2]
+    for qname, plan in skewed_queries().items():
+        base = Executor(cat, RelJoinStrategy()).execute(plan)
+        skew = Executor(cat, SkewAwareStrategy()).execute(plan)
+        assert JoinMethod.SALTED_SHUFFLE_HASH in skew.methods(), qname
+        assert JoinMethod.SALTED_SHUFFLE_HASH not in base.methods(), qname
+        assert rows_close(_rows(skew), _rows(base)), qname
+        assert skew.straggler_bytes < base.straggler_bytes, qname
+
+
+def test_reordering_wrapper_forwards_skew_awareness(zipf_catalogs):
+    """Reorder(SkewAware) must keep skew handling: the wrapper forwards the
+    executor-facing flags and the skew statistic is still measured. (It may
+    legitimately *avoid* the salted method — pruning/reordering can shrink
+    or resequence the hot join so plain shuffle wins — but the skew
+    machinery must be live, and results must match the unreordered plan.)"""
+    strat = ReorderingStrategy(SkewAwareStrategy())
+    assert strat.skew_aware and strat.skew_floor == 1.1
+    plan = skewed_queries()["q16_hot_customer"]
+    res = Executor(zipf_catalogs[1.2], strat).execute(plan)
+    assert any(d.left_stats.skew > 1 or d.right_stats.skew > 1
+               for d in res.decisions)
+    base = Executor(zipf_catalogs[1.2], SkewAwareStrategy()).execute(plan)
+    assert rows_close(_rows(res), _rows(base))
+
+
+def test_skew_overrides_target_single_column():
+    """Per-column skew targeting: only ss_customer_sk is hot, so q16's
+    customer join salts while the key's siblings stay uniform."""
+    cat = generate(scale=0.1, p=8, seed=11, skew=0.0,
+                   skew_overrides={"ss_customer_sk": 1.3})
+    ss = cat.table("store_sales")
+    assert key_skew(ss, "ss_customer_sk", 8) > 1.3
+    assert key_skew(ss, "ss_item_sk", 8) == 1.0
+    res = Executor(cat, SkewAwareStrategy()).execute(
+        skewed_queries()["q16_hot_customer"])
+    assert JoinMethod.SALTED_SHUFFLE_HASH in res.methods()
+
+
+def test_skew_statistic_reaches_selection(zipf_catalogs):
+    """The audit trail carries the measured skew: the salted decision's
+    probe-side statistic must show the straggler factor it priced."""
+    cat = zipf_catalogs[1.2]
+    res = Executor(cat, SkewAwareStrategy()).execute(
+        skewed_queries()["q16_hot_customer"])
+    d = res.decisions[0]
+    assert d.selection.method is JoinMethod.SALTED_SHUFFLE_HASH
+    assert d.left_stats.skew > 1.5
+    assert d.selection.salt_r >= 2
+
+
+# ---------------------------------------------------------------------------
+# Regression: executor overflow retry under Zipf-1.4 hot partitions
+# ---------------------------------------------------------------------------
+
+def test_overflow_retry_geometric_doubling(zipf_catalogs):
+    """A Zipf-1.4 shuffle whose hot partition exceeds the default
+    capacity_factor=2.0 slot budget must succeed via the executor's
+    geometric-doubling retry and preserve results."""
+    cat = zipf_catalogs[1.4]
+    # (a) the raw exchange at factor 2.0 genuinely overflows — the retry
+    # path is exercised, not skipped.
+    _, rep = shuffle(cat.table("store_sales"), "ss_customer_sk", 2.0)
+    assert rep.overflow_rows > 0
+    # (b) the executor absorbs it: forced plain shuffle vs the salted plan
+    # must both complete and agree.
+    plan = skewed_queries()["q16_hot_customer"]
+    forced = Executor(cat, ForcedStrategy(JoinMethod.SHUFFLE_HASH),
+                      capacity_factor=2.0).execute(plan)
+    salted = Executor(cat, SkewAwareStrategy(),
+                      capacity_factor=2.0).execute(plan)
+    assert forced.rows > 0
+    assert rows_close(_rows(forced), _rows(salted))
