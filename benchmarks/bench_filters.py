@@ -1,0 +1,79 @@
+"""Runtime bloom-filter benchmark: probe-side shuffle bytes, total network
+bytes and result equality of FilteredStrategy vs RelJoinStrategy on the
+filter-friendly queries (q19-q21).
+
+Reported per query:
+  * probe-side shuffle bytes (the traffic the filter exists to cut) and
+    total network bytes (which *includes* the filter's own broadcast — the
+    win is net of the filter's price),
+  * the planned filters: keys, m bits, k hashes, predicted vs measured
+    kept fraction,
+  * result equality (identical up to float summation order).
+
+Claim checks: every filtered query plans at least one filter, results are
+identical, and the suite-total probe-side shuffle bytes shrink by >= 2x.
+A parity check on unfiltered-build queries (q2, q9) asserts the strict
+cost gate: no filters planned, selections byte-identical.
+"""
+
+from __future__ import annotations
+
+from repro.joins.ref import rows_as_set, rows_close
+from repro.sql import (Executor, FilteredStrategy, RelJoinStrategy,
+                       all_queries, filtered_queries, generate)
+
+from .common import emit
+
+
+def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
+    catalog = generate(scale=scale, p=p, seed=0)
+    rows = []
+    for qname, plan in filtered_queries().items():
+        base = Executor(catalog, RelJoinStrategy(w=w)).execute(plan)
+        filt = Executor(catalog, FilteredStrategy(RelJoinStrategy(w=w))
+                        ).execute(plan)
+        same = rows_close(rows_as_set(filt.table.to_numpy()),
+                          rows_as_set(base.table.to_numpy()))
+        rows.append((qname, base, filt, same))
+        fdesc = ";".join(
+            f"{f.plan.probe_key}<-{f.plan.build_key}"
+            f"(m={f.plan.m_bits},k={f.plan.k},"
+            f"keep_est={f.plan.keep_est:.3f},keep={f.keep_measured:.3f})"
+            for f in filt.filters) or "none"
+        emit(f"filters/measured/{qname}", filt.wall_time_s * 1e6,
+             f"probe_shuffle_KB={base.probe_shuffle_bytes / 1024:.1f}"
+             f"->{filt.probe_shuffle_bytes / 1024:.1f};"
+             f"net_KB={base.network_bytes / 1024:.1f}"
+             f"->{filt.network_bytes / 1024:.1f};"
+             f"filter_KB={filt.filter_network_bytes / 1024:.2f};"
+             f"same={int(same)};filters={fdesc}")
+
+    # -- claim checks -------------------------------------------------------
+    for qname, base, filt, same in rows:
+        ratio = (base.probe_shuffle_bytes
+                 / max(filt.probe_shuffle_bytes, 1.0))
+        emit(f"filters/claim/{qname}", 0.0,
+             f"planned={int(bool(filt.filters))};"
+             f"probe_shuffle_x={ratio:.2f};same={int(same)};"
+             f"expect=planned&same")
+    total_base = sum(r[1].probe_shuffle_bytes for r in rows)
+    total_filt = sum(r[2].probe_shuffle_bytes for r in rows)
+    suite_x = total_base / max(total_filt, 1.0)
+    emit("filters/claim/suite_probe_shuffle", 0.0,
+         f"KB={total_base / 1024:.1f}->{total_filt / 1024:.1f};"
+         f"x={suite_x:.2f};expect>=2")
+
+    # -- parity: unfiltered builds plan nothing -----------------------------
+    for qname in ("q2_chain7", "q9_inventory_star"):
+        plan = all_queries()[qname]
+        base = Executor(catalog, RelJoinStrategy(w=w)).execute(plan)
+        filt = Executor(catalog, FilteredStrategy(RelJoinStrategy(w=w))
+                        ).execute(plan)
+        ok = (not filt.filters and filt.methods() == base.methods())
+        emit(f"filters/claim/parity/{qname}", 0.0,
+             f"no_filters_and_identical_selections={int(ok)};expect=1")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -5,7 +5,12 @@ derived-metric rows). Engine benchmarks use the measured-cluster-workload
 metric as primary (the paper's own §3.1.1 cost metric); wall-clock on this
 1-core container is a secondary signal.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only a,b]
+
+``--smoke`` imports and runs EVERY registered benchmark at scale 0.01 with
+minimal repeats — the CI job that keeps new benchmarks from rotting
+unexecuted. Registration is the ``REGISTRY`` table below: a benchmark that
+is not in it does not exist as far as run.py and CI are concerned.
 """
 
 from __future__ import annotations
@@ -14,51 +19,75 @@ import argparse
 import sys
 import time
 
+#: Tiny scale for the CI smoke profile: every fact shrinks to its 8-row
+#: floor .. ~1k rows; dimensions keep their fixed sizes. Fast enough to run
+#: the whole registry in one CI job, big enough to execute every code path.
+SMOKE_SCALE = 0.01
 
-def main() -> None:
+
+def _registry():
+    """name -> (module, default_kwargs, quick_kwargs, smoke_kwargs).
+
+    Bench modules are imported here rather than at module top level so
+    ``--help`` and argument errors don't pay for the jax-heavy stack.
+    (``--only`` still imports every registered module — imports are cheap
+    relative to any single benchmark run.)"""
+    from . import (bench_accuracy, bench_cost_model, bench_filters,
+                   bench_kernels, bench_psts, bench_reorder, bench_roofline,
+                   bench_skew, bench_strategies, bench_w_sweep)
+
+    s = SMOKE_SCALE
+    return {
+        "cost_model": (bench_cost_model, {}, {}, {}),
+        "kernels": (bench_kernels, {}, {}, {}),
+        "strategies": (bench_strategies,
+                       {"scales": (0.2, 0.5), "runs": 2},
+                       {"scales": (0.2,), "runs": 1},
+                       {"scales": (s,), "runs": 1}),
+        "accuracy": (bench_accuracy, {"scale": 0.3, "runs": 2},
+                     {"scale": 0.2, "runs": 1}, {"scale": s, "runs": 1}),
+        "psts": (bench_psts, {"scale": 0.3, "runs": 2},
+                 {"scale": 0.2, "runs": 1}, {"scale": s, "runs": 1}),
+        "w_sweep": (bench_w_sweep, {"scale": 0.3, "runs": 2},
+                    {"scale": 0.2, "runs": 1}, {"scale": s, "runs": 1}),
+        "reorder": (bench_reorder, {"scale": 0.2}, {"scale": 0.2},
+                    {"scale": s}),
+        "skew": (bench_skew, {"scale": 0.2, "zipfs": (0.0, 0.8, 1.2, 1.4)},
+                 {"scale": 0.2, "zipfs": (0.0, 1.2)},
+                 {"scale": s, "zipfs": (0.0, 1.2)}),
+        "filters": (bench_filters, {"scale": 0.2}, {"scale": 0.2},
+                    {"scale": s}),
+        "roofline": (bench_roofline, {}, {}, {}),
+    }
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller scales / fewer repeats")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"run every registered benchmark at scale "
+                         f"{SMOKE_SCALE} (CI rot-guard)")
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: strategies,accuracy,psts,"
-                         "w_sweep,cost_model,kernels,roofline,reorder,skew")
-    args = ap.parse_args()
+                    help="comma-separated subset of registered names")
+    args = ap.parse_args(argv)
+    registry = _registry()
     only = set(args.only.split(",")) if args.only else None
-
-    from . import (bench_accuracy, bench_cost_model, bench_kernels,
-                   bench_psts, bench_reorder, bench_roofline, bench_skew,
-                   bench_strategies, bench_w_sweep)
+    if only:
+        unknown = only - set(registry)
+        if unknown:
+            ap.error(f"unknown benchmarks: {sorted(unknown)}; "
+                     f"registered: {sorted(registry)}")
 
     print("name,us_per_call,derived")
     t0 = time.time()
-
-    def want(name):
-        return only is None or name in only
-
-    if want("cost_model"):
-        bench_cost_model.run()
-    if want("kernels"):
-        bench_kernels.run()
-    if want("strategies"):
-        bench_strategies.run(scales=(0.2,) if args.quick else (0.2, 0.5),
-                             runs=1 if args.quick else 2)
-    if want("accuracy"):
-        bench_accuracy.run(scale=0.2 if args.quick else 0.3,
-                           runs=1 if args.quick else 2)
-    if want("psts"):
-        bench_psts.run(scale=0.2 if args.quick else 0.3,
-                       runs=1 if args.quick else 2)
-    if want("w_sweep"):
-        bench_w_sweep.run(scale=0.2 if args.quick else 0.3,
-                          runs=1 if args.quick else 2)
-    if want("reorder"):
-        bench_reorder.run(scale=0.2)
-    if want("skew"):
-        bench_skew.run(scale=0.2,
-                       zipfs=(0.0, 1.2) if args.quick else (0.0, 0.8, 1.2,
-                                                            1.4))
-    if want("roofline"):
-        bench_roofline.run()
+    for name, (module, default, quick, smoke) in registry.items():
+        if only is not None and name not in only:
+            continue
+        kwargs = smoke if args.smoke else (quick if args.quick else default)
+        t1 = time.time()
+        module.run(**kwargs)
+        print(f"# {name} {time.time() - t1:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

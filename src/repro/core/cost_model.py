@@ -262,6 +262,64 @@ def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
 
 
 # ---------------------------------------------------------------------------
+# Runtime bloom-filter pushdown (sideways information passing).
+#
+# A bloom filter built over the build side's join keys and broadcast to the
+# probe side's tasks shrinks the probe dataset *before* its exchange: the
+# filtered exchange ships B'_probe = B_probe * keep bytes, where the kept
+# fraction is max(sigma_est, fpr) — sigma_est the true key-match fraction
+# (estimated from build-side distinct counts over the key domain) and fpr
+# the filter's false-positive floor. The filter itself costs its broadcast,
+# w * (p-1) * m/8 bytes of network workload (Eq. 1 applied to the m-bit
+# array), so Algorithm 1 only plans a filter when the filtered join plus
+# that surcharge is strictly cheaper than the unfiltered join.
+# ---------------------------------------------------------------------------
+
+#: Default filter budget: bits per distinct build-side key. 10 bits/key at
+#: the optimal hash count k = ln2 * m/n gives ~0.8% false positives.
+BLOOM_DEFAULT_BITS_PER_KEY = 10
+
+BLOOM_MIN_BITS = 256
+BLOOM_MAX_HASHES = 8
+
+
+def bloom_params(n_keys: float,
+                 bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY
+                 ) -> tuple[int, int]:
+    """(m_bits, k) for an expected ``n_keys`` distinct build keys.
+
+    ``m_bits`` is rounded up to a power of two (mask-reduction in the
+    kernel, and pow2-quantized sizes reuse XLA compilations across build
+    cardinalities, like ``compact_partitions``); ``k`` is the textbook
+    optimum ln2 * m/n clamped to [1, BLOOM_MAX_HASHES].
+    """
+    n = max(int(n_keys), 1)
+    m = max(BLOOM_MIN_BITS, 1 << (n * bits_per_key - 1).bit_length())
+    k = int(round(math.log(2) * m / n))
+    return m, max(1, min(BLOOM_MAX_HASHES, k))
+
+
+def bloom_fpr(n_keys: float, m_bits: int, k: int) -> float:
+    """Predicted false-positive rate (1 - e^{-kn/m})^k of a filter holding
+    ``n_keys`` keys in ``m_bits`` bits with ``k`` hashes."""
+    if n_keys <= 0:
+        return 0.0
+    return (1.0 - math.exp(-k * float(n_keys) / float(m_bits))) ** k
+
+
+def runtime_filter_cost(m_bits: int, params: CostParams) -> float:
+    """Workload of shipping the filter: broadcasting the m-bit array to the
+    probe side's p tasks (Eq. 1 on m/8 bytes), network-weighted by w."""
+    return params.w * (params.p - 1) * m_bits / 8.0
+
+
+def filtered_probe_fraction(sigma_est: float, fpr: float) -> float:
+    """Kept fraction of the probe side after a bloom filter: the match
+    fraction floored by the filter's false-positive rate."""
+    return min(max(max(sigma_est, fpr), 0.0), 1.0)
+
+
+# ---------------------------------------------------------------------------
 # The relative-size criterion (Eq. 13).
 # ---------------------------------------------------------------------------
 

@@ -34,8 +34,8 @@ AXIS = "p"
 
 def make_join_mesh(p: int) -> Mesh:
     """1-D mesh over the join parallelism p."""
-    return jax.make_mesh((p,), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from ..launch.mesh import _axis_type_kwargs
+    return jax.make_mesh((p,), (AXIS,), **_axis_type_kwargs(1))
 
 
 def place(table: Table, mesh: Mesh) -> Table:

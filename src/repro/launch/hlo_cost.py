@@ -172,14 +172,28 @@ def _multipliers(comps: Dict[str, List[OpLine]]) -> Dict[str, float]:
     return mult
 
 
-def _operand_bytes(op: OpLine,
-                   symtab: Dict[str, Tuple[str, Tuple[int, ...]]]) -> float:
+def _operand_names(op: OpLine) -> List[str]:
+    """Operand op-names of an HLO instruction, in order.
+
+    Handles both operand syntaxes: the bare ``dot(%a, %b)`` of older dumps
+    and the typed ``dot(f32[128,128]{1,0} %a, ...)`` of newer ones — the
+    type annotations carry commas inside brackets, so comma-splitting is
+    only safe when no ``%``-prefixed names are present.
+    """
     mo = _OPERANDS_RE.search(op.text)
     if not mo:
-        return 0.0
+        return []
+    group = mo.group(1)
+    names = re.findall(r"%([\w.\-]+)", group)
+    if names:
+        return names
+    return [p.strip() for p in group.split(",") if p.strip()]
+
+
+def _operand_bytes(op: OpLine,
+                   symtab: Dict[str, Tuple[str, Tuple[int, ...]]]) -> float:
     total = 0.0
-    for name in mo.group(1).split(","):
-        name = name.strip().lstrip("%")
+    for name in _operand_names(op):
         dtype, dims = symtab.get(name, (None, None))
         if dims is None:
             continue
@@ -192,10 +206,7 @@ def _operand_bytes(op: OpLine,
 
 def _dot_flops(op: OpLine, symtab: Dict[str, Tuple[str, Tuple[int, ...]]]
                ) -> float:
-    mo = _OPERANDS_RE.search(op.text)
-    if not mo:
-        return 0.0
-    operands = [o.strip().lstrip("%") for o in mo.group(1).split(",")]
+    operands = _operand_names(op)
     lhs = operands[0] if operands else ""
     lhs_shape = symtab.get(lhs, (None, ()))[1]
     mc = _LHS_CONTRACT_RE.search(op.text)
@@ -208,10 +219,7 @@ def _dot_flops(op: OpLine, symtab: Dict[str, Tuple[str, Tuple[int, ...]]]
 
 
 def _nth_operand_bytes(op: OpLine, symtab, idx: int) -> float:
-    mo = _OPERANDS_RE.search(op.text)
-    if not mo:
-        return 0.0
-    names = [o.strip().lstrip("%") for o in mo.group(1).split(",")]
+    names = _operand_names(op)
     if idx >= len(names):
         return 0.0
     dtype, dims = symtab.get(names[idx], (None, None))

@@ -3,23 +3,26 @@ strategies, the logical plan optimizer (pushdown / pruning / System-R join
 reordering), and the adaptive stage-wise executor."""
 
 from .datagen import Catalog, generate
-from .executor import ExecutionResult, Executor, JoinDecision
+from .executor import ExecutionResult, Executor, FilterDecision, JoinDecision
 from .logical import (Aggregate, Filter, Join, JoinEdge, JoinGraph, Node,
-                      Project, Scan, extract_join_graph)
+                      Project, RuntimeFilter, Scan, extract_join_graph)
 from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
-                      optimize, prune_projections, push_down_filters)
-from .queries import (all_queries, every_query, misordered_queries,
-                      skewed_queries)
-from .strategies import (AQEStrategy, ForcedStrategy, RelJoinStrategy,
-                         ReorderingStrategy, SkewAwareStrategy, Strategy,
-                         default_strategies)
+                      optimize, plan_runtime_filters, prune_projections,
+                      push_down_filters)
+from .queries import (all_queries, every_query, filtered_queries,
+                      misordered_queries, skewed_queries)
+from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
+                         RelJoinStrategy, ReorderingStrategy,
+                         SkewAwareStrategy, Strategy, default_strategies)
 
 __all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
-           "JoinDecision", "Aggregate", "Filter", "Join", "JoinEdge",
-           "JoinGraph", "Node", "Project", "Scan", "extract_join_graph",
-           "OptimizedPlan", "enumerate_join_order", "modeled_tree_cost",
-           "optimize", "prune_projections", "push_down_filters",
-           "all_queries", "every_query", "misordered_queries",
-           "skewed_queries", "AQEStrategy", "ForcedStrategy",
-           "RelJoinStrategy", "ReorderingStrategy", "SkewAwareStrategy",
-           "Strategy", "default_strategies"]
+           "FilterDecision", "JoinDecision", "Aggregate", "Filter", "Join",
+           "JoinEdge", "JoinGraph", "Node", "Project", "RuntimeFilter",
+           "Scan", "extract_join_graph", "OptimizedPlan",
+           "enumerate_join_order", "modeled_tree_cost", "optimize",
+           "plan_runtime_filters", "prune_projections", "push_down_filters",
+           "all_queries", "every_query", "filtered_queries",
+           "misordered_queries", "skewed_queries", "AQEStrategy",
+           "FilteredStrategy", "ForcedStrategy", "RelJoinStrategy",
+           "ReorderingStrategy", "SkewAwareStrategy", "Strategy",
+           "default_strategies"]

@@ -18,10 +18,17 @@ from ..joins.table import Table, from_numpy, partition_round_robin
 
 @dataclasses.dataclass
 class Catalog:
-    """Named stacked tables + their (exact) base statistics."""
+    """Named stacked tables + their (exact) base statistics.
+
+    ``key_domains`` maps key columns (FKs and PKs alike) to the cardinality
+    of the domain they draw from — the denominator of the runtime-filter
+    planner's selectivity estimate sigma = surviving build keys / domain.
+    It is header metadata (like the PK contract), not a measurement.
+    """
 
     tables: Dict[str, Table]
     p: int
+    key_domains: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def table(self, name: str) -> Table:
         return self.tables[name]
@@ -140,9 +147,24 @@ def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
         "inv_quantity_on_hand": rng.integers(0, 1000, ni).astype(np.int32),
     })
 
+    domains = {col: float(n[dim]) for col, dim in FK_DIMENSIONS.items()}
+    domains.update({pk: float(n[t]) for t, pk in PRIMARY_KEYS.items()})
     return Catalog({k: partition_round_robin(t, p)
-                    for k, t in tables.items()}, p)
+                    for k, t in tables.items()}, p, key_domains=domains)
 
+
+#: fact FK column -> the dimension whose PK domain it draws from. Feeds
+#: ``Catalog.key_domains`` (runtime-filter selectivity estimation).
+FK_DIMENSIONS = {
+    "ss_item_sk": "item", "ss_store_sk": "store",
+    "ss_customer_sk": "customer", "ss_sold_date_sk": "date_dim",
+    "ss_promo_sk": "promotion",
+    "cs_item_sk": "item", "cs_ship_date_sk": "date_dim",
+    "cs_bill_customer_sk": "customer", "cs_warehouse_sk": "warehouse",
+    "inv_item_sk": "item", "inv_date_sk": "date_dim",
+    "inv_warehouse_sk": "warehouse",
+    "c_hdemo_sk": "household",
+}
 
 #: primary key of each dimension (build-side uniqueness contract).
 PRIMARY_KEYS = {

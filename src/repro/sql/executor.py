@@ -21,7 +21,8 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
-from ..core.cost_model import CostParams, JoinMethod
+from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
+                               JoinMethod)
 from ..core.selection import JoinProperties, JoinType, Selection
 from ..core.stats import (StatsSource, TableStats, estimate_filter,
                           estimate_group_by, estimate_join)
@@ -29,12 +30,26 @@ from ..joins.aggregate import group_aggregate
 from ..joins.exchange import key_skew
 from ..joins.methods import JoinReport, run_equi_join
 from ..joins.table import Table, compact_partitions
+from ..kernels.bloom import bloom_build, bloom_probe
 from .datagen import Catalog
-from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project, Scan,
-                      augment_edges, extract_join_graph, leaf_retain_fraction)
-from .planner import (JoinStep, catalog_schema, enumerate_join_order,
-                      modeled_tree_cost, prune_projections, push_down_filters)
+from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
+                      RuntimeFilter, Scan, augment_edges, extract_join_graph,
+                      leaf_retain_fraction)
+from .planner import (JoinStep, catalog_base_stats, catalog_schema,
+                      enumerate_join_order, leaf_key_domain,
+                      modeled_tree_cost, plan_runtime_filters,
+                      prune_projections, push_down_filters)
 from .strategies import Strategy
+
+#: Shuffle-family methods: both sides cross the wire, so a probe-side
+#: runtime filter reduces their exchange bytes (broadcast ships B only).
+_SHUFFLE_FAMILY = (JoinMethod.SHUFFLE_HASH, JoinMethod.SHUFFLE_SORT,
+                   JoinMethod.SALTED_SHUFFLE_HASH)
+
+#: Join types whose result survives dropping non-matching probe rows: the
+#: bloom filter never drops a matching row (no false negatives), so these
+#: are exactly the types for which a probe-side filter is semantics-free.
+_FILTERABLE_TYPES = (JoinType.INNER, JoinType.LEFT_SEMI)
 
 
 @dataclasses.dataclass
@@ -61,6 +76,37 @@ class JoinDecision:
         sum of the per-exchange straggler loads)."""
         return sum(e.straggler_bytes for e in self.report.exchanges)
 
+    @property
+    def probe_shuffle_bytes(self) -> float:
+        """Network bytes the probe (plan-left) side shipped through this
+        join's shuffle — the traffic runtime filters exist to cut.
+        Broadcast-family joins never move the probe side, so 0 there."""
+        if self.selection.method not in _SHUFFLE_FAMILY:
+            return 0.0
+        return self.report.exchanges[0].network_bytes
+
+
+@dataclasses.dataclass
+class FilterDecision:
+    """Audit record of one planned-and-executed runtime bloom filter."""
+
+    plan: RuntimeFilter      # the planner's placement + cost rationale
+    rows_before: int
+    rows_after: int
+    p: int                   # parallelism the filter was broadcast over
+
+    @property
+    def network_bytes(self) -> float:
+        """Measured wire cost of the filter: broadcasting its m-bit array
+        to the probe side's p-1 remote tasks (Eq. 1 on m/8 bytes)."""
+        return (self.p - 1) * self.plan.m_bits / 8.0
+
+    @property
+    def keep_measured(self) -> float:
+        if self.rows_before <= 0:
+            return 1.0
+        return self.rows_after / self.rows_before
+
 
 @dataclasses.dataclass
 class ExecutionResult:
@@ -73,6 +119,8 @@ class ExecutionResult:
     #: Sum over joins of their hottest-partition exchange loads — the
     #: skew-sensitive lower bound on stage wall time (straggler metric).
     straggler_bytes: float = 0.0
+    #: Runtime bloom filters that were planned and applied, in order.
+    filters: List["FilterDecision"] = dataclasses.field(default_factory=list)
 
     def methods(self):
         return [d.selection.method for d in self.decisions]
@@ -80,6 +128,18 @@ class ExecutionResult:
     def workload(self, w: float = 1.0) -> float:
         """Measured cluster workload under the paper's weighting."""
         return w * self.network_bytes + self.local_bytes
+
+    @property
+    def filter_network_bytes(self) -> float:
+        """Wire bytes spent broadcasting runtime filters (already included
+        in ``network_bytes`` — honest accounting of the filters' price)."""
+        return sum(f.network_bytes for f in self.filters)
+
+    @property
+    def probe_shuffle_bytes(self) -> float:
+        """Suite metric for runtime filters: bytes the probe sides shipped
+        through shuffle-family exchanges."""
+        return sum(d.probe_shuffle_bytes for d in self.decisions)
 
 
 @dataclasses.dataclass
@@ -111,13 +171,23 @@ class Executor:
         # keeping the paper's strategies bit-identical and measurement-free).
         self.skew_aware = getattr(strategy, "skew_aware", False)
         self.skew_floor = getattr(strategy, "skew_floor", 1.1)
+        # Runtime bloom-filter pushdown (FilteredStrategy): the Executor
+        # plans a filter per join-graph edge with *measured* build-side
+        # statistics and applies it to the probe side below its exchanges.
+        self.runtime_filters = getattr(strategy, "runtime_filters", False)
+        self.filter_bits_per_key = getattr(strategy, "bits_per_key",
+                                           BLOOM_DEFAULT_BITS_PER_KEY)
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
+        # Key-domain denominators for the filter planner's sigma estimate.
+        self._base_stats = (catalog_base_stats(catalog)
+                            if self.runtime_filters else {})
 
     # -- public ---------------------------------------------------------------
 
     def execute(self, plan: Node) -> ExecutionResult:
         self._decisions: List[JoinDecision] = []
+        self._filters: List[FilterDecision] = []
         if self.reorder:
             plan = prune_projections(push_down_filters(plan, self._schema),
                                      self._schema)
@@ -126,10 +196,12 @@ class Executor:
         ann.table.valid.block_until_ready()
         dt = time.perf_counter() - t0
         net = sum(d.network_bytes for d in self._decisions)
+        net += sum(f.network_bytes for f in self._filters)
         loc = sum(d.local_bytes for d in self._decisions)
         strag = sum(d.straggler_bytes for d in self._decisions)
         return ExecutionResult(ann.table, self._decisions, dt, net, loc,
-                               ann.table.count(), straggler_bytes=strag)
+                               ann.table.count(), straggler_bytes=strag,
+                               filters=self._filters)
 
     # -- evaluation ------------------------------------------------------------
 
@@ -162,7 +234,10 @@ class Executor:
                 TableStats(e.size_bytes * frac, e.cardinality, e.source))
 
         if isinstance(node, Join):
-            if self.reorder:
+            if self.reorder or self.runtime_filters:
+                # Regions are extracted for reordering AND for runtime
+                # filters: leaf-level filter application is what pushes a
+                # filter below the probe side's earlier exchanges.
                 graph = extract_join_graph(node, self._schema)
                 if graph is not None and graph.n >= 3:
                     return self._eval_region(graph)
@@ -172,6 +247,10 @@ class Executor:
             # statistics). Non-adaptive mode keeps static estimates.
             lstats = self._boundary_stats(left, node.left)
             rstats = self._boundary_stats(right, node.right)
+            if (self.runtime_filters and node.hint is None
+                    and node.join_type in _FILTERABLE_TYPES):
+                left, lstats = self._filter_pair(left, lstats, right, rstats,
+                                                 node)
             return self._join(left, right, lstats, rstats, node.left_key,
                               node.right_key, node.join_type, node.hint)
 
@@ -187,6 +266,71 @@ class Executor:
             return _Annotated(out, measured, est)
 
         raise TypeError(f"unknown plan node {type(node)}")
+
+    # -- runtime bloom-filter pushdown -----------------------------------------
+
+    def _leaf_sigma(self, leaf: Node, stat: TableStats,
+                    build_key: str) -> float:
+        """Estimated match fraction when ``leaf`` plays the build role: its
+        surviving distinct keys (= measured cardinality; build keys are
+        unique) over the key domain. Falls back to the static retain
+        fraction when no domain is known (e.g. aggregated subqueries)."""
+        domain = self.catalog.key_domains.get(build_key)
+        if domain is None:
+            domain = leaf_key_domain(leaf, self._base_stats)
+        if domain and domain > 0:
+            return min(max(stat.cardinality, 0.0) / domain, 1.0)
+        return leaf_retain_fraction(leaf)
+
+    def _filter_pair(self, left: _Annotated, lstats: TableStats,
+                     right: _Annotated, rstats: TableStats,
+                     node: Join):
+        """Plan + apply a runtime filter for a single (non-region) join:
+        the probe table is masked before the join's exchange."""
+        sigma = self._leaf_sigma(node.right, rstats, node.right_key)
+        edge = JoinEdge(0, 1, node.left_key, node.right_key)
+        plan = plan_runtime_filters([edge], [lstats, rstats], [1.0, sigma],
+                                    self._params, self.filter_bits_per_key)
+        if not plan:
+            return left, lstats
+        left = self._apply_runtime_filter(plan[0], left, right.table)
+        return left, self._boundary_stats(left, node.left)
+
+    def _region_filters(self, graph, anns, stats, edges):
+        """Plan filters over a region's (augmented) edges with measured leaf
+        statistics and apply them at the probe *leaves* — below every
+        exchange of the region — then re-measure, so the reordering DP and
+        all selections run on post-filter cardinalities."""
+        sigmas = [1.0] * graph.n
+        for e in edges:
+            sigmas[e.build] = self._leaf_sigma(graph.leaves[e.build],
+                                               stats[e.build], e.build_key)
+        plan = plan_runtime_filters(edges, stats, sigmas, self._params,
+                                    self.filter_bits_per_key)
+        for rf in plan:
+            anns[rf.probe] = self._apply_runtime_filter(
+                rf, anns[rf.probe], anns[rf.build].table)
+            stats[rf.probe] = self._boundary_stats(anns[rf.probe],
+                                                   graph.leaves[rf.probe])
+        return anns, stats
+
+    def _apply_runtime_filter(self, rf: RuntimeFilter, probe: _Annotated,
+                              build: Table) -> _Annotated:
+        """Build the bloom filter from the build side's surviving keys and
+        mask the probe table (no false negatives: only rows that cannot
+        match are dropped). An empty build side yields the all-zero filter,
+        whose mask rejects every probe row — the join result is empty
+        either way."""
+        bits = bloom_build(build.column(rf.build_key), build.valid,
+                           m_bits=rf.m_bits, k=rf.k)
+        keep = bloom_probe(probe.table.column(rf.probe_key), bits, k=rf.k)
+        table = probe.table.with_valid(probe.table.valid & keep)
+        measured = table.measure()
+        self._filters.append(FilterDecision(rf, probe.table.count(),
+                                            int(measured.cardinality),
+                                            self.p))
+        return _Annotated(table, measured,
+                          probe.estimated.scaled(rf.keep_est))
 
     # -- join execution --------------------------------------------------------
 
@@ -258,6 +402,15 @@ class Executor:
                  for a, l in zip(anns, graph.leaves)]
         retain = [leaf_retain_fraction(l) for l in graph.leaves]
         edges = augment_edges(graph)
+        if self.runtime_filters:
+            # Sideways information passing: filters built from selective
+            # build leaves mask the probe leaves *here*, before any of the
+            # region's exchanges; the re-plan below then runs on measured
+            # post-filter cardinalities.
+            anns, stats = self._region_filters(graph, anns, stats, edges)
+        if not self.reorder:
+            # Filter-only strategies keep the written join order.
+            return self._exec_region_tree(graph.tree, graph, anns)
         plan_cost = modeled_tree_cost(graph, stats, retain, self._params)
         order = enumerate_join_order(stats, retain, edges, self._params)
         if order is None or not order.cost < plan_cost * (1 - 1e-9):

@@ -73,6 +73,26 @@ class Aggregate(Node):
         return (self.child,)
 
 
+def signature(plan: Node) -> str:
+    """Canonical one-line structural signature of a logical plan. Captures
+    join order, join keys/types and operator nesting — what the golden-plan
+    snapshots pin so optimizer edits can't silently reorder a plan."""
+    if isinstance(plan, Scan):
+        return plan.table
+    if isinstance(plan, Filter):
+        return f"filter[{plan.column} {plan.op}]({signature(plan.child)})"
+    if isinstance(plan, Project):
+        return f"project[{','.join(plan.columns)}]({signature(plan.child)})"
+    if isinstance(plan, Aggregate):
+        return f"agg[{plan.key}]({signature(plan.child)})"
+    if isinstance(plan, Join):
+        tag = f"{plan.left_key}={plan.right_key}"
+        if plan.join_type is not JoinType.INNER:
+            tag += f",{plan.join_type.value}"
+        return f"join[{tag}]({signature(plan.left)},{signature(plan.right)})"
+    raise TypeError(f"unknown plan node {type(plan)}")
+
+
 def count_joins(plan: Node) -> int:
     n = 1 if isinstance(plan, Join) else 0
     return n + sum(count_joins(c) for c in plan.children())
@@ -266,6 +286,31 @@ def unique_key_sides(graph: JoinGraph):
         if isinstance(base, Aggregate):
             unique.add((i, base.key))
     return unique
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFilter:
+    """A planned runtime bloom-filter pushdown on one join-graph edge.
+
+    The filter is built over the build leaf's join-key column and applied
+    to the probe leaf's key column *at the leaf* — below every exchange the
+    probe side subsequently goes through, which is what makes it sideways
+    information passing rather than an ordinary join predicate. Edges
+    derived through key equivalence classes (``derived=True``) push a
+    dimension's filter onto relations it is never directly joined with.
+    """
+
+    probe: int          # leaf index whose rows are filtered
+    build: int          # leaf index whose keys define membership
+    probe_key: str
+    build_key: str
+    m_bits: int         # filter width (power of two)
+    k: int              # hash count
+    sigma_est: float    # estimated true match fraction of probe rows
+    keep_est: float     # max(sigma_est, fpr) — planned kept fraction
+    benefit: float      # modeled workload saved on the filtered join
+    cost: float         # modeled workload of broadcasting the filter
+    derived: bool = False
 
 
 def augment_edges(graph: JoinGraph):

@@ -28,13 +28,17 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from ..core.cost_model import CostParams, JoinMethod, method_cost
+from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
+                               JoinMethod, bloom_fpr, bloom_params,
+                               filtered_probe_fraction, method_cost,
+                               runtime_filter_cost)
 from ..core.selection import JoinProperties, JoinType, select_join_method
 from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
                           estimate_join, estimate_project)
 from .datagen import Catalog
-from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project, Scan,
-                      Schema, augment_edges, extract_join_graph, leaf_columns,
+from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
+                      RuntimeFilter, Scan, Schema, augment_edges,
+                      extract_join_graph, filter_chain, leaf_columns,
                       leaf_retain_fraction)
 
 #: Static guess for an aggregate's group count as a fraction of input rows
@@ -261,6 +265,68 @@ def modeled_tree_cost(graph: JoinGraph, leaf_stats: List[TableStats],
         return out, lr * rr, lc + rc + cost
 
     return go(graph.tree)[2]
+
+
+# ---------------------------------------------------------------------------
+# Runtime bloom-filter placement (sideways information passing)
+# ---------------------------------------------------------------------------
+
+def leaf_key_domain(node: Node, base_stats: Dict[str, TableStats]
+                    ) -> Optional[float]:
+    """Cardinality of the key domain a leaf's unique key spans: the base
+    scan's row count (dimension PKs cover [0, n)). None when the leaf is
+    not rooted in a scan (e.g. an aggregated subquery) — the filter planner
+    then falls back to the leaf's static retain fraction."""
+    base, _ = filter_chain(node)
+    if isinstance(base, Project):
+        return leaf_key_domain(base.child, base_stats)
+    if isinstance(base, Scan):
+        st = base_stats.get(base.table)
+        return st.cardinality if st is not None else None
+    return None
+
+
+def plan_runtime_filters(edges, leaf_stats: List[TableStats],
+                         sigmas: List[float], params: CostParams,
+                         bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY
+                         ) -> List[RuntimeFilter]:
+    """Decide bloom-filter placement per join-graph edge.
+
+    ``sigmas[i]`` is leaf i's estimated match fraction when it plays the
+    build role: the share of the probe side's key domain its surviving keys
+    cover (measured build cardinality / domain when the executor calls
+    this, the static retain fraction in the planner). An edge gets a filter
+    iff the filtered join plus the filter's broadcast cost is *strictly*
+    cheaper under the RelJoin cost model than the unfiltered join — so at
+    sigma = 1 (unfiltered build) nothing is ever planned and selections are
+    byte-identical to the paper's. Edges derived through key equivalence
+    classes participate too: that is what pushes a dimension's filter below
+    exchanges of relations it never directly joins.
+    """
+    out: List[RuntimeFilter] = []
+    seen = set()
+    for e in edges:
+        ident = (e.probe, e.build, e.probe_key, e.build_key)
+        if ident in seen:
+            continue
+        seen.add(ident)
+        a, b = leaf_stats[e.probe], leaf_stats[e.build]
+        n = max(b.cardinality, 0.0)
+        m_bits, k = bloom_params(n, bits_per_key)
+        fpr = bloom_fpr(n, m_bits, k)
+        keep = filtered_probe_fraction(sigmas[e.build], fpr)
+        if keep >= 1.0 or a.cardinality <= 0:
+            continue
+        _, unfiltered = _step(a, b, params)
+        _, filtered = _step(a.scaled(keep), b, params)
+        fcost = runtime_filter_cost(m_bits, params)
+        if filtered + fcost < unfiltered * (1 - 1e-9):
+            out.append(RuntimeFilter(e.probe, e.build, e.probe_key,
+                                     e.build_key, m_bits, k,
+                                     sigmas[e.build], keep,
+                                     unfiltered - filtered, fcost,
+                                     derived=e.derived))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -229,10 +229,60 @@ def skewed_queries() -> Dict[str, Node]:
     }
 
 
+# ---------------------------------------------------------------------------
+# Filter-friendly queries (runtime bloom-filter targets): star shapes whose
+# selective dimension predicate makes the probe side mostly dead weight at
+# its shuffle — a bloom filter over the surviving dimension keys, applied
+# to the fact below its exchanges, cuts the shipped bytes by ~1/sigma.
+# Selectivities are tuned so the big fact x customer joins stay in shuffle
+# territory (k < k0) with filters on AND off, so the saving shows up as
+# probe-side shuffle bytes rather than a method flip.
+# ---------------------------------------------------------------------------
+
+
+def q19_filtered_customer() -> Node:
+    """Fact x 30%-filtered customer (k ~ 3 << k0, shuffle both ways): the
+    canonical single-edge filter — ~70% of the fact never ships."""
+    f = Filter(Scan("customer"), "c_income", "lt", 74_000,
+               selectivity=0.3)
+    j = Join(_ss(), f, "ss_customer_sk", "c_customer_sk")
+    return Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
+
+
+def q20_filter_below_earlier_exchange() -> Node:
+    """The *unfiltered* customer shuffle runs first in plan order; the
+    selective item predicate joins later. Leaf-level placement pushes the
+    item filter below the customer exchange, so the first shuffle already
+    ships only the ~10% of fact rows with surviving items."""
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, Filter(Scan("item"), "i_category", "lt", 1, selectivity=0.1),
+             "ss_item_sk", "i_item_sk")
+    return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
+
+
+def q21_catalog_filtered_dates() -> Node:
+    """Catalog channel: the date predicate (1 quarter ~ 25%) sits on a tiny
+    broadcast dimension, yet its filter — pushed onto the fact leaf —
+    quarters the later customer join's shuffled bytes."""
+    j = Join(_cs(), Scan("customer"), "cs_bill_customer_sk", "c_customer_sk")
+    j = Join(j, Filter(Scan("date_dim"), "d_month", "between", 0, value2=2,
+                       selectivity=0.25), "cs_ship_date_sk", "d_date_sk")
+    return Aggregate(j, "c_region", (("cs_sales_price", "sum"),))
+
+
+def filtered_queries() -> Dict[str, Node]:
+    return {
+        "q19_filtered_customer": q19_filtered_customer(),
+        "q20_filter_below_earlier_exchange": q20_filter_below_earlier_exchange(),
+        "q21_catalog_filtered_dates": q21_catalog_filtered_dates(),
+    }
+
+
 def every_query() -> Dict[str, Node]:
     """The 12 baseline plans plus the 3 mis-ordered planner targets.
-    (The skewed q16-q18 are separate: they only bite on skewed catalogs —
-    see ``skewed_queries()`` and benchmarks/bench_skew.py.)"""
+    (The skewed q16-q18 and filter-friendly q19-q21 are separate: they
+    target specific catalogs/strategies — see ``skewed_queries()`` /
+    ``filtered_queries()`` and bench_skew / bench_filters.)"""
     out = all_queries()
     out.update(misordered_queries())
     return out

@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..core.cost_model import CostParams, JoinMethod
+from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
+                               JoinMethod)
 from ..core.selection import (JoinProperties, Selection, select_absolute_size,
                               select_forced, select_join_method)
 from ..core.stats import DEFAULT_WATERMARK_BYTES, TableStats
@@ -20,6 +21,12 @@ class Strategy:
     #: attaches it to the runtime statistics, enabling the straggler-aware
     #: costs and the salted shuffle method.
     skew_aware: bool = False
+    #: When True the Executor plans runtime bloom-filter pushdown: build a
+    #: filter over the build side's join keys at its exchange boundary and
+    #: apply it to the probe side *below* its exchanges, wherever the cost
+    #: model says the filtered join plus the filter's broadcast is strictly
+    #: cheaper.
+    runtime_filters: bool = False
 
     def select(self, left: TableStats, right: TableStats,
                props: JoinProperties, p: int) -> Selection:
@@ -121,11 +128,51 @@ class ReorderingStrategy(Strategy):
         self.name = f"Reorder({self.inner.name})"
         self.reorder = True
         # Forward the wrapped strategy's executor-facing flags: without
-        # these, Reorder(SkewAware(...)) would silently lose skew handling.
+        # these, Reorder(SkewAware(...)) would silently lose skew handling
+        # and Reorder(Filtered(...)) its runtime-filter pushdown.
         self.skew_aware = getattr(self.inner, "skew_aware", False)
         self.skew_floor = getattr(self.inner, "skew_floor", 1.1)
+        self.runtime_filters = getattr(self.inner, "runtime_filters", False)
+        self.bits_per_key = getattr(self.inner, "bits_per_key",
+                                    BLOOM_DEFAULT_BITS_PER_KEY)
         if self.w is None:
             self.w = getattr(self.inner, "w", 1.0)
+
+    def select(self, left, right, props, p):
+        return self.inner.select(left, right, props, p)
+
+
+@dataclasses.dataclass
+class FilteredStrategy(Strategy):
+    """Wrapper adding runtime bloom-filter pushdown to any baseline.
+
+    Method selection is delegated to the wrapped strategy unchanged; the
+    Executor, seeing ``runtime_filters=True``, additionally plans a bloom
+    filter per join-graph edge (``planner.plan_runtime_filters``): built
+    from the build side's surviving join keys at its exchange boundary,
+    applied to the probe relation's key column at the *leaf* — below every
+    exchange the probe side later goes through — and only where the cost
+    model prices the filtered join plus the filter's broadcast strictly
+    below the unfiltered join. With every sigma estimate at 1 (no selective
+    dimension predicate) nothing is planned and the wrapped strategy's
+    selections are byte-identical.
+    """
+
+    inner: Strategy = dataclasses.field(default_factory=lambda:
+                                        RelJoinStrategy())
+    #: Filter budget: bits per distinct build-side key (m is the next power
+    #: of two; k the optimal ln2 * m/n).
+    bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY
+
+    def __post_init__(self):
+        self.name = f"Filtered({self.inner.name})"
+        self.runtime_filters = True
+        # Forward the wrapped strategy's executor-facing flags so
+        # Filtered(Reorder(...)) / Filtered(SkewAware(...)) compose.
+        self.reorder = getattr(self.inner, "reorder", False)
+        self.skew_aware = getattr(self.inner, "skew_aware", False)
+        self.skew_floor = getattr(self.inner, "skew_floor", 1.1)
+        self.w = getattr(self.inner, "w", 1.0)
 
     def select(self, left, right, props, p):
         return self.inner.select(left, right, props, p)

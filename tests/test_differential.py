@@ -15,6 +15,11 @@ default slot budget) is absorbed by the same geometric-doubling retry the
 executor uses — the harness thereby also exercises that contract at the
 method level.
 
+A second grid runs every method x case with the runtime bloom prefilter
+(FilteredStrategy's data path) on the probe side, asserting equality with
+the *unfiltered* oracle — including the empty-build-side case, where the
+filter rejects everything and the result is empty rather than a crash.
+
 A deterministic property layer (``hypothesis_compat`` shim — the real
 hypothesis package, when installed) fuzzes sizes/skew/seed across all
 methods with the same fixed shapes.
@@ -27,9 +32,10 @@ import pytest
 from helpers.hypothesis_compat import given, settings
 from helpers.hypothesis_compat import strategies as st
 
-from repro.core.cost_model import JoinMethod
+from repro.core.cost_model import JoinMethod, bloom_params
 from repro.joins import from_numpy, partition_round_robin, run_equi_join
 from repro.joins.ref import ref_equi_join, rows_as_set
+from repro.kernels.bloom import bloom_build, bloom_probe
 from repro.sql.datagen import _zipf_fks
 
 ALL_METHODS = [JoinMethod.BROADCAST_HASH, JoinMethod.SHUFFLE_HASH,
@@ -139,6 +145,60 @@ def test_salted_agrees_for_any_salt_count(salt_r):
     out, _ = _run_with_retry(JoinMethod.SALTED_SHUFFLE_HASH, A, B,
                              salt_r=salt_r)
     assert rows_as_set(out.to_numpy()) == want
+
+
+def _bloom_prefilter(A, B, bits_per_key: int = 10):
+    """Mirror of Executor._apply_runtime_filter at the method level: build a
+    bloom over B's valid keys, mask A's valid rows ahead of the join — the
+    FilteredStrategy data path without the cost gate."""
+    nb = int(np.asarray(B.valid).sum())
+    m_bits, k = bloom_params(nb, bits_per_key)
+    bits = bloom_build(B.column("k"), B.valid, m_bits=m_bits, k=k)
+    keep = bloom_probe(A.column("k"), bits, k=k)
+    return A.with_valid(A.valid & keep)
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_differential_inner_with_runtime_filter(method, case, p=8):
+    """FilteredStrategy's data path on the full adversarial grid: a bloom
+    prefilter on the probe side must leave every method's inner-join result
+    equal to the *unfiltered* oracle (no false negatives means no lost
+    matches; false positives are dropped by the join itself). The
+    empty-build cases double as the filter-rejects-everything path: the
+    result is empty, never a crash."""
+    rng = np.random.default_rng(zlib.crc32(f"filtered/{case}/{p}".encode()))
+    a_keys, b_keys = _case(case, rng)
+    a, b, A, B = _tables(a_keys, b_keys, p)
+    want = rows_as_set(ref_equi_join(a.to_numpy(), b.to_numpy(), "k", "k"))
+    out, _ = _run_with_retry(method, _bloom_prefilter(A, B), B)
+    assert rows_as_set(out.to_numpy()) == want, (method, case)
+
+
+@pytest.mark.parametrize("jt", ["inner", "left_semi"])
+@pytest.mark.parametrize("method", HASH_FAMILY)
+def test_runtime_filter_join_types(method, jt):
+    """The join types a probe-side filter is semantics-free for (the
+    executor's _FILTERABLE_TYPES gate) stay oracle-equal under it."""
+    rng = np.random.default_rng(23)
+    a_keys, b_keys = _case("zipf_mild", rng)
+    a, b, A, B = _tables(a_keys, b_keys, 8)
+    want = rows_as_set(ref_equi_join(a.to_numpy(), b.to_numpy(), "k", "k",
+                                     join_type=jt))
+    out, _ = _run_with_retry(method, _bloom_prefilter(A, B), B, join_type=jt)
+    assert rows_as_set(out.to_numpy()) == want, (method, jt)
+
+
+def test_runtime_filter_empty_build_yields_empty_result():
+    """Filter from an empty build rejects every probe row: the join runs on
+    an all-invalid probe side and returns the empty result, no crash."""
+    rng = np.random.default_rng(5)
+    a_keys, _ = _case("uniform", rng)
+    a, b, A, B = _tables(a_keys, np.empty(0, np.int32), 8)
+    for method in ALL_METHODS:
+        out, rep = _run_with_retry(method, _bloom_prefilter(A, B), B)
+        assert out.count() == 0, method
+        assert rep.output_rows == 0, method
 
 
 @settings(max_examples=6, deadline=None)

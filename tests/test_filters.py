@@ -1,0 +1,206 @@
+"""Runtime bloom-filter pushdown: executor + planner integration tests.
+
+Covers the FilteredStrategy end to end: result preservation on every query
+family, the strict cost gate (no filters on unfiltered builds => selections
+byte-identical to the wrapped strategy), leaf-level placement below earlier
+exchanges, measured-stat re-planning, the empty-build degenerate case, and
+composition with reordering and skew awareness.
+"""
+
+import pytest
+
+from repro.core.cost_model import (CostParams, bloom_fpr, bloom_params,
+                                   filtered_probe_fraction,
+                                   runtime_filter_cost)
+from repro.joins.ref import rows_as_set, rows_close
+from repro.sql import (Executor, FilteredStrategy, RelJoinStrategy,
+                       ReorderingStrategy, SkewAwareStrategy, all_queries,
+                       filtered_queries, plan_runtime_filters)
+from repro.sql.logical import Aggregate, Filter, Join, JoinEdge, Scan
+from repro.core.stats import TableStats
+
+
+def _rows(res):
+    return rows_as_set(res.table.to_numpy())
+
+
+# ---------------------------------------------------------------------------
+# Planner: placement decisions
+# ---------------------------------------------------------------------------
+
+
+def _stats(size, card):
+    return TableStats(float(size), float(card))
+
+
+def test_planner_plans_filter_only_when_strictly_cheaper():
+    params = CostParams(p=8, w=1.0)
+    edge = [JoinEdge(0, 1, "fk", "pk")]
+    probe, build = _stats(1 << 20, 32_768), _stats(1 << 14, 1_024)
+    # Selective build (sigma 0.1): the shuffle saving dwarfs the broadcast.
+    planned = plan_runtime_filters(edge, [probe, build], [1.0, 0.1], params)
+    assert len(planned) == 1
+    rf = planned[0]
+    assert rf.benefit > rf.cost
+    assert rf.keep_est == pytest.approx(
+        filtered_probe_fraction(0.1, bloom_fpr(1_024, rf.m_bits, rf.k)))
+    # Unfiltered build (sigma 1): nothing to save, nothing planned.
+    assert plan_runtime_filters(edge, [probe, build], [1.0, 1.0], params) == []
+
+
+def test_planner_respects_broadcast_cost_floor():
+    """A tiny probe side cannot amortize the filter broadcast: the cost
+    inequality must reject the filter even at high selectivity."""
+    params = CostParams(p=8, w=1.0)
+    edge = [JoinEdge(0, 1, "fk", "pk")]
+    probe, build = _stats(2_000, 100), _stats(160_000, 10_000)
+    assert plan_runtime_filters(edge, [probe, build], [1.0, 0.1],
+                                params) == []
+
+
+def test_planner_dedupes_equivalent_edges():
+    params = CostParams(p=8, w=1.0)
+    edges = [JoinEdge(0, 1, "fk", "pk"), JoinEdge(0, 1, "fk", "pk", True)]
+    probe, build = _stats(1 << 20, 32_768), _stats(1 << 14, 1_024)
+    planned = plan_runtime_filters(edges, [probe, build], [1.0, 0.1], params)
+    assert len(planned) == 1
+
+
+def test_filter_cost_model_units():
+    params = CostParams(p=8, w=2.0)
+    assert runtime_filter_cost(8192, params) == pytest.approx(2.0 * 7 * 1024)
+    m, k = bloom_params(1000)
+    assert m >= 1000 * 10 and m & (m - 1) == 0
+    assert 1 <= k <= 8
+
+
+# ---------------------------------------------------------------------------
+# Executor: end-to-end behaviour
+# ---------------------------------------------------------------------------
+
+
+# The session-scoped ``catalog`` fixture (scale 0.1, p=4) is reused for
+# end-to-end runs: its shapes are already warm in the XLA compile cache.
+
+
+@pytest.mark.parametrize("qname", sorted(filtered_queries()))
+def test_filtered_results_identical(catalog, qname):
+    """Filters must never change results — only bytes shipped."""
+    plan = filtered_queries()[qname]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    assert rows_close(_rows(filt), _rows(base)), qname
+    assert filt.filters, f"{qname} planned no filter"
+    assert filt.probe_shuffle_bytes < base.probe_shuffle_bytes
+
+
+def test_no_filters_on_unfiltered_builds(catalog):
+    """Strict-cheaper gate: with no selective dimension predicate, sigma is
+    1 everywhere, nothing is planned, and selections are byte-identical to
+    the wrapped strategy's."""
+    plan = all_queries()["q9_inventory_star"]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    assert filt.filters == []
+    assert filt.methods() == base.methods()
+    assert filt.network_bytes == pytest.approx(base.network_bytes)
+
+
+#: One representative per query shape: filtered star, aggregate build,
+#: big-dim shuffle, semi, anti. (The full method x case grid runs in
+#: test_differential; golden snapshots pin q1-q18 selections.)
+_PRESERVE_QUERIES = ("q1_star3", "q3_cross_channel", "q7_filtered_fact",
+                     "q8_semi", "q12_anti")
+
+
+@pytest.mark.parametrize("qname", _PRESERVE_QUERIES)
+def test_filtered_strategy_preserves_baseline_queries(catalog, qname):
+    """Whatever the planner decides, baseline results are preserved."""
+    plan = all_queries()[qname]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    assert rows_close(_rows(filt), _rows(base)), qname
+
+
+def test_filter_pushed_below_earlier_exchange(catalog):
+    """q20: the item predicate joins *after* the customer shuffle in plan
+    order, yet its filter lands on the fact leaf — the customer join's
+    probe exchange must shrink by ~the item selectivity."""
+    plan = filtered_queries()["q20_filter_below_earlier_exchange"]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    assert len(filt.filters) == 1
+    f = filt.filters[0]
+    assert f.plan.probe_key == "ss_item_sk"
+    # The *first* executed join is fact x customer; its probe exchange ran
+    # on the filtered fact.
+    first_base = base.decisions[0].probe_shuffle_bytes
+    first_filt = filt.decisions[0].probe_shuffle_bytes
+    assert first_filt < 0.3 * first_base
+    assert rows_close(_rows(filt), _rows(base))
+
+
+def test_replan_uses_measured_post_filter_stats(catalog):
+    """The join selection after a filter must see the measured post-filter
+    probe cardinality, not the pre-filter one."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    f = filt.filters[0]
+    d = filt.decisions[0]
+    assert f.rows_after < f.rows_before
+    assert d.left_stats.cardinality == f.rows_after
+
+
+def test_empty_build_side_yields_empty_result(catalog):
+    """A predicate rejecting the whole dimension: the filter drops every
+    probe row and the query returns the empty result without crashing."""
+    f = Filter(Scan("customer"), "c_income", "lt", -1.0, selectivity=0.01)
+    plan = Aggregate(Join(Scan("store_sales"), f, "ss_customer_sk",
+                          "c_customer_sk"),
+                     "c_region", (("ss_net_profit", "sum"),))
+    res = Executor(catalog, FilteredStrategy()).execute(plan)
+    assert res.rows == 0
+    assert res.filters and res.filters[0].rows_after == 0
+
+
+def test_filter_network_accounting(catalog):
+    """The filter broadcast is charged to network_bytes (honest accounting:
+    the m-bit array crosses the wire p-1 times)."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    filt = Executor(catalog, FilteredStrategy()).execute(plan)
+    join_net = sum(d.network_bytes for d in filt.decisions)
+    assert filt.network_bytes == pytest.approx(
+        join_net + filt.filter_network_bytes)
+    assert filt.filter_network_bytes > 0
+
+
+def test_wrappers_forward_filter_flags():
+    """Both composition orders expose runtime_filters to the Executor:
+    Reorder(Filtered(X)) must not silently lose filter pushdown."""
+    inner = FilteredStrategy(bits_per_key=12)
+    wrapped = ReorderingStrategy(inner)
+    assert wrapped.runtime_filters and wrapped.reorder
+    assert wrapped.bits_per_key == 12
+    other = FilteredStrategy(ReorderingStrategy())
+    assert other.runtime_filters and other.reorder
+
+
+def test_composes_with_reordering(catalog):
+    """Filtered(Reorder(RelJoin)): both rewrites active, results intact."""
+    plan = filtered_queries()["q20_filter_below_earlier_exchange"]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    comp = Executor(catalog,
+                    FilteredStrategy(ReorderingStrategy())).execute(plan)
+    assert comp.filters
+    assert rows_close(_rows(comp), _rows(base))
+
+
+def test_composes_with_skew_awareness(catalog):
+    """Filtered(SkewAware): the post-filter table is what the straggler
+    measurement sees (a filter changes the skew the exchange experiences)."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    comp = Executor(catalog,
+                    FilteredStrategy(SkewAwareStrategy())).execute(plan)
+    assert comp.filters
+    assert rows_close(_rows(comp), _rows(base))

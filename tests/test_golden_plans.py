@@ -1,0 +1,107 @@
+"""Golden-plan snapshot tests: the physical-plan decisions of q1-q18 are
+pinned in a checked-in JSON fixture so cost-model / planner edits can't
+silently regress them.
+
+Per query, the fixture records:
+
+  * for every default strategy (ShuffleSort, ShuffleHash, AQE, RelJoin):
+    the executed per-join (method, swapped_sides) sequence on the standard
+    test catalog (scale 0.1, p=4, seed 42 — the session fixture),
+  * for Reorder(RelJoin) on the mis-ordered planner targets (q13-q15):
+    the executed methods — pinning the adaptive DP's chosen order,
+  * the static planner audit: whether ``optimize`` reordered each query and
+    the canonical signature of the emitted plan (the DP join order).
+
+Snapshots are compared field-by-field (byte-identical selections). This PR
+records them with runtime filters OFF — FilteredStrategy changes nothing
+unless wrapped in, so these snapshots also prove the filter machinery left
+q1-q18 untouched.
+
+Regenerate deliberately with:
+
+    GOLDEN_UPDATE=1 PYTHONPATH=src python -m pytest tests/test_golden_plans.py
+"""
+
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.sql import (Executor, RelJoinStrategy, ReorderingStrategy,
+                       all_queries, default_strategies, misordered_queries,
+                       optimize, skewed_queries)
+from repro.sql.logical import signature
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_plans.json"
+
+#: q1-q18: the full baseline + planner-target + skew-target suite.
+#: (Skewed queries run on the uniform catalog here: their *selection*
+#: snapshot is the uniform-key one; bench_skew owns the skewed behaviour.)
+
+
+def golden_queries():
+    out = dict(all_queries())
+    out.update(misordered_queries())
+    out.update(skewed_queries())
+    return out
+
+
+def _decisions(res):
+    return [{"method": d.selection.method.value,
+             "swapped": bool(d.selection.swapped_sides)}
+            for d in res.decisions]
+
+
+def build_snapshot(catalog) -> dict:
+    queries = golden_queries()
+    snap = {"catalog": {"scale": 0.1, "p": 4, "seed": 42}, "queries": {}}
+    strategies = default_strategies()
+    for qname in sorted(queries):
+        plan = queries[qname]
+        entry = {"strategies": {}}
+        for strat in strategies:
+            res = Executor(catalog, strat).execute(plan)
+            entry["strategies"][strat.name] = _decisions(res)
+        if qname in misordered_queries():
+            res = Executor(catalog,
+                           ReorderingStrategy(RelJoinStrategy())
+                           ).execute(plan)
+            entry["strategies"]["Reorder(RelJoin(w=1))"] = _decisions(res)
+        opt = optimize(plan, catalog)
+        entry["dp"] = {"reordered": bool(opt.reordered),
+                       "signature": signature(opt.plan)}
+        snap["queries"][qname] = entry
+    return snap
+
+
+@pytest.fixture(scope="module")
+def snapshot(catalog):
+    return build_snapshot(catalog)
+
+
+def test_fixture_exists_or_update():
+    if os.environ.get("GOLDEN_UPDATE"):
+        pytest.skip("regeneration run")
+    assert FIXTURE.exists(), (
+        "golden fixture missing — regenerate with GOLDEN_UPDATE=1")
+
+
+def test_golden_plans(snapshot):
+    if os.environ.get("GOLDEN_UPDATE"):
+        FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+        FIXTURE.write_text(json.dumps(snapshot, indent=1, sort_keys=True)
+                           + "\n")
+        pytest.skip(f"regenerated {FIXTURE}")
+    want = json.loads(FIXTURE.read_text())
+    assert snapshot["catalog"] == want["catalog"]
+    assert sorted(snapshot["queries"]) == sorted(want["queries"])
+    for qname, got in snapshot["queries"].items():
+        exp = want["queries"][qname]
+        for sname, decs in exp["strategies"].items():
+            assert got["strategies"][sname] == decs, (qname, sname)
+        assert got["dp"] == exp["dp"], qname
+
+
+def test_snapshot_covers_q1_to_q18(snapshot):
+    assert len(snapshot["queries"]) == 18

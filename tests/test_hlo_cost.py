@@ -22,8 +22,13 @@ def test_scan_flops_multiplied_by_trip_count():
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
     c = _compile(scanned, x, ws)
-    # XLA's own analysis counts the body once (the bug we fix):
-    assert c.cost_analysis()["flops"] == pytest.approx(2 * 128 ** 3)
+    # XLA's own analysis counts the body once (the bug we fix). Older jax
+    # returns a one-element list of dicts, newer a bare dict.
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # rel tolerance: some versions add a handful of loop-bookkeeping flops.
+    assert ca["flops"] == pytest.approx(2 * 128 ** 3, rel=1e-3)
     # ours counts trip_count * body:
     assert analyze(c.as_text()).flops == pytest.approx(8 * 2 * 128 ** 3)
 
