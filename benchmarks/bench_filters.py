@@ -1,19 +1,24 @@
-"""Runtime bloom-filter benchmark: probe-side shuffle bytes, total network
-bytes and result equality of FilteredStrategy vs RelJoinStrategy on the
-filter-friendly queries (q19-q21).
+"""Runtime-filter framework benchmark: probe-side shuffle bytes, total
+network bytes, per-edge kind selection and result equality of
+FilteredStrategy (bloom + zone-map + semi-join) vs RelJoinStrategy — and
+vs the PR-3 bloom-only configuration — on the filter-friendly queries
+(q19-q23).
 
 Reported per query:
-  * probe-side shuffle bytes (the traffic the filter exists to cut) and
-    total network bytes (which *includes* the filter's own broadcast — the
-    win is net of the filter's price),
-  * the planned filters: keys, m bits, k hashes, predicted vs measured
+  * probe-side shuffle bytes (the traffic runtime filters exist to cut)
+    and total network bytes (which *includes* the filters' reduce-tree +
+    broadcast — the win is net of the filters' price),
+  * the planned filters: kind, keys, wire bits, predicted vs measured
     kept fraction,
   * result equality (identical up to float summation order).
 
 Claim checks: every filtered query plans at least one filter, results are
-identical, and the suite-total probe-side shuffle bytes shrink by >= 2x.
-A parity check on unfiltered-build queries (q2, q9) asserts the strict
-cost gate: no filters planned, selections byte-identical.
+identical, the framework picks a non-bloom kind on at least one query
+(q22 -> zone_map, q23 -> semi_join), the suite-total probe-side shuffle
+bytes shrink by >= 2x, and on the PR-3 queries (q19-q21) the framework's
+probe-shuffle bytes are never worse than bloom-only. A parity check on
+unfiltered-build queries (q2, q9) asserts the strict cost gate: no
+filters planned, selections byte-identical.
 """
 
 from __future__ import annotations
@@ -24,6 +29,11 @@ from repro.sql import (Executor, FilteredStrategy, RelJoinStrategy,
 
 from .common import emit
 
+#: The PR-3 queries: filter-friendly, but with no kind diversity — the
+#: bloom-vs-framework parity claim runs on these.
+_BLOOM_ERA = ("q19_filtered_customer", "q20_filter_below_earlier_exchange",
+              "q21_catalog_filtered_dates")
+
 
 def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
     catalog = generate(scale=scale, p=p, seed=0)
@@ -32,12 +42,17 @@ def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
         base = Executor(catalog, RelJoinStrategy(w=w)).execute(plan)
         filt = Executor(catalog, FilteredStrategy(RelJoinStrategy(w=w))
                         ).execute(plan)
+        # The bloom-only run only feeds the q19-q21 parity claim.
+        bloom = (Executor(catalog,
+                          FilteredStrategy(RelJoinStrategy(w=w),
+                                           kinds=("bloom",))).execute(plan)
+                 if qname in _BLOOM_ERA else None)
         same = rows_close(rows_as_set(filt.table.to_numpy()),
                           rows_as_set(base.table.to_numpy()))
-        rows.append((qname, base, filt, same))
+        rows.append((qname, base, filt, bloom, same))
         fdesc = ";".join(
-            f"{f.plan.probe_key}<-{f.plan.build_key}"
-            f"(m={f.plan.m_bits},k={f.plan.k},"
+            f"{f.plan.kind}:{f.plan.probe_key}<-{f.plan.build_key}"
+            f"(bits={f.plan.m_bits},"
             f"keep_est={f.plan.keep_est:.3f},keep={f.keep_measured:.3f})"
             for f in filt.filters) or "none"
         emit(f"filters/measured/{qname}", filt.wall_time_s * 1e6,
@@ -49,7 +64,7 @@ def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
              f"same={int(same)};filters={fdesc}")
 
     # -- claim checks -------------------------------------------------------
-    for qname, base, filt, same in rows:
+    for qname, base, filt, bloom, same in rows:
         ratio = (base.probe_shuffle_bytes
                  / max(filt.probe_shuffle_bytes, 1.0))
         emit(f"filters/claim/{qname}", 0.0,
@@ -62,6 +77,21 @@ def run(scale: float = 0.2, p: int = 8, w: float = 1.0):
     emit("filters/claim/suite_probe_shuffle", 0.0,
          f"KB={total_base / 1024:.1f}->{total_filt / 1024:.1f};"
          f"x={suite_x:.2f};expect>=2")
+
+    # -- framework claims: kind diversity + no regression vs bloom-only -----
+    kinds = sorted({f.plan.kind for _, _, filt, _, _ in rows
+                    for f in filt.filters})
+    emit("filters/claim/kind_diversity", 0.0,
+         f"kinds={'+'.join(kinds)};non_bloom={int(any(k != 'bloom' for k in kinds))};"
+         f"expect=non_bloom")
+    for qname, base, filt, bloom, _ in rows:
+        if qname not in _BLOOM_ERA:
+            continue
+        ok = filt.probe_shuffle_bytes <= bloom.probe_shuffle_bytes * 1.001
+        emit(f"filters/claim/no_worse_than_bloom/{qname}", 0.0,
+             f"framework_KB={filt.probe_shuffle_bytes / 1024:.1f};"
+             f"bloom_only_KB={bloom.probe_shuffle_bytes / 1024:.1f};"
+             f"ok={int(ok)};expect=1")
 
     # -- parity: unfiltered builds plan nothing -----------------------------
     for qname in ("q2_chain7", "q9_inventory_star"):

@@ -40,8 +40,29 @@ def run_suite(catalog, strategy: Strategy, runs: int = 2,
     return out
 
 
+#: When a capture is active (run.py --json-out), every emitted row is also
+#: recorded here so the orchestrator can persist machine-readable results.
+_capture: List[dict] | None = None
+
+
+def start_capture() -> None:
+    """Begin recording emitted rows (one benchmark module's run)."""
+    global _capture
+    _capture = []
+
+
+def end_capture() -> List[dict]:
+    """Stop recording; return the rows emitted since ``start_capture``."""
+    global _capture
+    rows, _capture = (_capture or []), None
+    return rows
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    if _capture is not None:
+        _capture.append({"name": name, "us_per_call": round(us_per_call, 2),
+                         "derived": derived})
 
 
 def mean(xs: List[float]) -> float:

@@ -6,18 +6,28 @@ metric as primary (the paper's own §3.1.1 cost metric); wall-clock on this
 1-core container is a secondary signal.
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only a,b]
+                                            [--json-out DIR]
 
 ``--smoke`` imports and runs EVERY registered benchmark at scale 0.01 with
 minimal repeats — the CI job that keeps new benchmarks from rotting
 unexecuted. Registration is the ``REGISTRY`` table below: a benchmark that
 is not in it does not exist as far as run.py and CI are concerned.
+
+``--json-out DIR`` additionally writes one ``DIR/<bench>.json`` per
+benchmark — the emitted rows plus profile metadata and wall time — which
+the CI smoke job uploads as the ``bench-smoke-json`` artifact, seeding the
+cross-PR benchmark trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+from . import common
 
 #: Tiny scale for the CI smoke profile: every fact shrinks to its 8-row
 #: floor .. ~1k rows; dimensions keep their fixed sizes. Fast enough to run
@@ -70,7 +80,12 @@ def main(argv=None) -> None:
                          f"{SMOKE_SCALE} (CI rot-guard)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of registered names")
+    ap.add_argument("--json-out", default="",
+                    help="directory for per-benchmark JSON result files")
     args = ap.parse_args(argv)
+    json_dir = pathlib.Path(args.json_out) if args.json_out else None
+    if json_dir is not None:
+        json_dir.mkdir(parents=True, exist_ok=True)
     registry = _registry()
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -86,8 +101,18 @@ def main(argv=None) -> None:
             continue
         kwargs = smoke if args.smoke else (quick if args.quick else default)
         t1 = time.time()
+        if json_dir is not None:
+            common.start_capture()
         module.run(**kwargs)
-        print(f"# {name} {time.time() - t1:.1f}s", file=sys.stderr)
+        dt = time.time() - t1
+        if json_dir is not None:
+            profile = ("smoke" if args.smoke
+                       else "quick" if args.quick else "default")
+            payload = {"bench": name, "profile": profile, "kwargs": kwargs,
+                       "seconds": round(dt, 3), "rows": common.end_capture()}
+            (json_dir / f"{name}.json").write_text(
+                json.dumps(payload, indent=1, default=str) + "\n")
+        print(f"# {name} {dt:.1f}s", file=sys.stderr)
 
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

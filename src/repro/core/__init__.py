@@ -4,12 +4,15 @@ tensor-op planner that applies the same cost model to sharded-LM collectives.
 """
 
 from .cost_model import (CostParams, JoinMethod, RANK, all_costs,
-                         broadcast_hash_cost, broadcast_nl_cost,
-                         broadcast_preferred, cartesian_cost,
-                         default_salt_factor, k0_threshold, method_cost,
+                         bloom_total_cost, broadcast_hash_cost,
+                         broadcast_nl_cost, broadcast_preferred,
+                         cartesian_cost, default_salt_factor,
+                         filter_reduce_cost, k0_threshold, method_cost,
                          relative_size, salted_shuffle_hash_cost,
-                         shuffle_hash_cost, shuffle_sort_cost)
-from .psts import PSTSReport, compute_psts, selections_differ
+                         semi_join_cost, shuffle_hash_cost,
+                         shuffle_sort_cost, zone_map_cost)
+from .psts import (PSTSReport, compute_psts, distinct_count, key_set,
+                   selections_differ, semi_join_mask)
 from .selection import (AQE_BROADCAST_THRESHOLD_BYTES, INNER_LIKE,
                         JoinProperties, JoinType, Selection,
                         select_absolute_size, select_forced,
@@ -19,11 +22,13 @@ from .stats import (DEFAULT_WATERMARK_BYTES, StatsSource, TableStats,
                     estimate_project, unknown_stats)
 
 __all__ = [
-    "CostParams", "JoinMethod", "RANK", "all_costs", "broadcast_hash_cost",
-    "broadcast_nl_cost", "broadcast_preferred", "cartesian_cost",
-    "default_salt_factor", "k0_threshold", "method_cost", "relative_size",
-    "salted_shuffle_hash_cost", "shuffle_hash_cost", "shuffle_sort_cost",
-    "PSTSReport", "compute_psts", "selections_differ",
+    "CostParams", "JoinMethod", "RANK", "all_costs", "bloom_total_cost",
+    "broadcast_hash_cost", "broadcast_nl_cost", "broadcast_preferred",
+    "cartesian_cost", "default_salt_factor", "filter_reduce_cost",
+    "k0_threshold", "method_cost", "relative_size",
+    "salted_shuffle_hash_cost", "semi_join_cost", "shuffle_hash_cost",
+    "shuffle_sort_cost", "zone_map_cost", "PSTSReport", "compute_psts",
+    "distinct_count", "key_set", "selections_differ", "semi_join_mask",
     "AQE_BROADCAST_THRESHOLD_BYTES", "INNER_LIKE", "JoinProperties",
     "JoinType", "Selection", "select_absolute_size", "select_forced",
     "select_join_method", "DEFAULT_WATERMARK_BYTES", "StatsSource",

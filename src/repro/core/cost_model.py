@@ -313,10 +313,63 @@ def runtime_filter_cost(m_bits: int, params: CostParams) -> float:
     return params.w * (params.p - 1) * m_bits / 8.0
 
 
+def filter_reduce_cost(m_bits: int, params: CostParams) -> float:
+    """Workload of the distributed filter *build*: the build side's p
+    partitions hold disjoint key subsets, so each builds a partial filter
+    and the partials are merged up a binary reduce tree (OR for bloom
+    words, min/max for zone maps, set-union for semi-join key lists) —
+    ceil(log2 p) rounds of m/8 bytes on the wire, network-weighted by w.
+    Zero at p = 1 (the global build needs no merge)."""
+    if params.p <= 1:
+        return 0.0
+    return params.w * math.ceil(math.log2(params.p)) * m_bits / 8.0
+
+
 def filtered_probe_fraction(sigma_est: float, fpr: float) -> float:
     """Kept fraction of the probe side after a bloom filter: the match
     fraction floored by the filter's false-positive rate."""
     return min(max(max(sigma_est, fpr), 0.0), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Non-bloom runtime-filter kinds: the same plan-vs-price framing (ship the
+# filter iff the filtered join plus the filter's wire cost is strictly
+# cheaper) applied to a min/max zone map and an exact semi-join reducer.
+# ---------------------------------------------------------------------------
+
+#: Wire size of a zone map: one (min, max) int32 pair.
+ZONE_MAP_BITS = 64
+
+#: Wire size per distinct key of the exact semi-join reducer (int32 keys).
+SEMI_JOIN_BITS_PER_KEY = 32
+
+
+def zone_map_cost(params: CostParams) -> float:
+    """Total workload of a zone-map filter: reduce the per-partition
+    (min, max) pairs up the tree, then broadcast the 8-byte interval
+    (Eq. 1). The cheapest reducer the model knows — but only *applicable*
+    when the build side's surviving keys are band-shaped, else its keep
+    fraction degenerates toward 1."""
+    return (runtime_filter_cost(ZONE_MAP_BITS, params)
+            + filter_reduce_cost(ZONE_MAP_BITS, params))
+
+
+def semi_join_cost(n_keys: float, params: CostParams) -> float:
+    """Total workload of an exact semi-join reducer over ``n_keys``
+    distinct build keys: union the per-partition key lists up the reduce
+    tree, then broadcast the n*32-bit list. No false-positive floor — the
+    kept fraction is exactly sigma — so it beats bloom when the key list
+    is small enough that exactness outprices the denser encoding."""
+    bits = max(n_keys, 0.0) * SEMI_JOIN_BITS_PER_KEY
+    return (runtime_filter_cost(bits, params)
+            + filter_reduce_cost(bits, params))
+
+
+def bloom_total_cost(m_bits: int, params: CostParams) -> float:
+    """Total workload of a bloom filter: OR-reduce the per-partition
+    partial bit arrays up the tree, then broadcast the merged m bits."""
+    return (runtime_filter_cost(m_bits, params)
+            + filter_reduce_cost(m_bits, params))
 
 
 # ---------------------------------------------------------------------------

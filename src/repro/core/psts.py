@@ -1,4 +1,5 @@
-"""Performance Sensitivity To Selections (PSTS) — paper §5.4, Table 5.
+"""Performance Sensitivity To Selections (PSTS) — paper §5.4, Table 5 —
+plus the distinct-key machinery the exact semi-join reducer builds on.
 
 PSTS = %TimeDiff / %JoinDiff with a baseline strategy (AQE in the paper):
 
@@ -10,6 +11,14 @@ PSTS = %TimeDiff / %JoinDiff with a baseline strategy (AQE in the paper):
 PSTS > 0: the strategy's differing selections help; ~1 means 1% of selection
 changes buys 1% completion-time reduction. Near 0 / negative: ineffective or
 harmful (paper: ShuffleSort -0.03, ShuffleHash -0.04, RelJoin 1.98).
+
+The selection-difference accounting above and semi-join reduction answer
+the same underlying question — *which distinct join keys actually
+participate?* — so the distinct-key helpers live here: ``key_set`` folds a
+(possibly duplicated, partially invalid) key column into a sorted
+membership structure, ``distinct_count`` sizes it, and ``semi_join_mask``
+is the exact probe — the zero-false-positive reducer the runtime-filter
+planner weighs against bloom filters and zone maps.
 """
 
 from __future__ import annotations
@@ -17,7 +26,74 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
+
 from .cost_model import JoinMethod
+
+#: Sentinel used to pad the sorted key set to its static capacity. Chosen
+#: as INT32_MAX so padding sorts to the tail; a real key equal to the
+#: sentinel would be indistinguishable from padding, so ``key_set`` tracks
+#: the live count separately and ``semi_join_mask`` only consults the
+#: live prefix.
+KEY_SET_SENTINEL = 2 ** 31 - 1
+
+
+def key_set(keys: jax.Array, valid: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Sorted distinct-key membership structure of the valid entries.
+
+    Returns ``(sorted_keys, n_distinct)``: an int32 array of the input's
+    flattened (static) shape — distinct live keys sorted ascending, then
+    sentinel padding — and the scalar count of distinct live keys. Pure
+    function of the key *set*: duplicates and input order do not change
+    the result (the property serialization / bit-identity tests pin).
+    """
+    flat = keys.reshape(-1).astype(jnp.int32)
+    v = (jnp.ones(flat.shape, jnp.bool_) if valid is None
+         else valid.reshape(-1).astype(jnp.bool_))
+    if flat.shape[0] == 0:
+        return flat, jnp.int32(0)
+    # Invalid rows sort to the tail as sentinels; duplicate live keys are
+    # then sentinel-ed too (first occurrence wins) and re-sorted away.
+    # Positions < n_valid hold exactly the sorted live keys, so masking the
+    # duplicate test to that prefix keeps the arithmetic correct even for a
+    # live key that happens to equal the sentinel value.
+    s = jnp.sort(jnp.where(v, flat, KEY_SET_SENTINEL))
+    n_valid = jnp.sum(v)
+    live = jnp.arange(s.shape[0]) < n_valid
+    dup = jnp.concatenate([jnp.zeros((1,), jnp.bool_),
+                           s[1:] == s[:-1]]) & live
+    distinct = jnp.sort(jnp.where(dup, KEY_SET_SENTINEL, s))
+    return distinct, n_valid - jnp.sum(dup)
+
+
+def distinct_count(keys: jax.Array, valid: jax.Array | None = None) -> int:
+    """Concrete number of distinct valid keys (host sync)."""
+    _, n = key_set(keys, valid)
+    return int(n)
+
+
+def semi_join_mask(probe_keys: jax.Array, sorted_keys: jax.Array,
+                   n: jax.Array | int | None = None) -> jax.Array:
+    """Exact membership mask of ``probe_keys`` against a ``key_set``.
+
+    Binary search on the sorted array (log2 n compares per probe, all
+    vectorized) — no hashing, no false positives, no false negatives.
+    ``n`` bounds the live prefix; rows landing in the sentinel padding are
+    rejected. Same shape as ``probe_keys``.
+    """
+    flat = probe_keys.reshape(-1).astype(jnp.int32)
+    if sorted_keys.shape[0] == 0:
+        return jnp.zeros(probe_keys.shape, jnp.bool_)
+    idx = jnp.searchsorted(sorted_keys, flat)
+    idx = jnp.clip(idx, 0, sorted_keys.shape[0] - 1)
+    hit = jnp.take(sorted_keys, idx) == flat
+    if n is not None:
+        hit = hit & (idx < n)
+    else:
+        hit = hit & (jnp.take(sorted_keys, idx) != KEY_SET_SENTINEL)
+    return hit.reshape(probe_keys.shape)
 
 
 def _is_shuffle(m: JoinMethod) -> bool:

@@ -12,6 +12,13 @@ The per-partition compute (slot packing, radix hash join, sort join) is the
 CPU CI container this runs on ``--xla_force_host_platform_device_count``
 placeholder devices (see tests/test_distributed_join.py); on a real cluster
 the identical program spans pods.
+
+``dist_bloom_build`` is the distributed runtime-filter build: each device
+folds its own partition's join keys into a partial bloom filter, the
+partials are OR-merged across the mesh (an all-reduce tree over the bitwise
+or — the ``filter_reduce_cost`` term the cost model charges), and every
+device ends up holding the merged array, bit-identical to the global-view
+``kernels.bloom.bloom_build`` of the whole column.
 """
 
 from __future__ import annotations
@@ -24,12 +31,20 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..kernels.bloom import _positions
 from .local_join import hash_join, sort_join
 from .slots import (SHUFFLE_SEED, gather_rows, hash32, pair_capacity,
                     slot_scatter)
 from .table import Table
 
 AXIS = "p"
+
+# jax.shard_map became a top-level API only after 0.4.x; fall back to the
+# experimental home so the distributed tier runs on the pinned toolchain.
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def make_join_mesh(p: int) -> Mesh:
@@ -98,7 +113,7 @@ def dist_shuffle_hash_join(a: Table, b: Table, a_key: str, b_key: str,
         out_cols, out_valid = _attach(ra_cols, ra_valid, rb_cols, res)
         return ({n: c[None] for n, c in out_cols.items()}, out_valid[None])
 
-    cols, valid = jax.shard_map(
+    cols, valid = _shard_map(
         f, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS)),
@@ -123,12 +138,66 @@ def dist_shuffle_sort_join(a: Table, b: Table, a_key: str, b_key: str,
         out_cols, out_valid = _attach(ra_cols, ra_valid, rb_cols, res)
         return ({n: c[None] for n, c in out_cols.items()}, out_valid[None])
 
-    cols, valid = jax.shard_map(
+    cols, valid = _shard_map(
         f, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS)),
     )(a.columns, a.valid, b.columns, b.valid)
     return Table(cols, valid)
+
+
+# -- distributed runtime-filter build ----------------------------------------
+
+def _partial_bloom_words(keys: jax.Array, valid: jax.Array, m_bits: int,
+                         k: int) -> jax.Array:
+    """Partial bloom filter of one partition's live keys: a dense jnp
+    build (scatter is fine outside Pallas) sharing ``_positions`` with the
+    kernel pair, so partial ORs compose to the exact global bit array."""
+    flat = keys.reshape(-1).astype(jnp.int32)
+    v = valid.reshape(-1)
+    bits = jnp.zeros((m_bits,), jnp.bool_)
+    for i in range(k):
+        pos = _positions(flat, i, m_bits).astype(jnp.int32)
+        # Invalid rows scatter out of range and are dropped.
+        pos = jnp.where(v, pos, m_bits)
+        bits = bits.at[pos].set(True, mode="drop")
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        jnp.where(bits.reshape(m_bits // 32, 32),
+                  jnp.uint32(1) << shifts[None, :], jnp.uint32(0)),
+        axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("key", "mesh", "m_bits", "k"))
+def dist_bloom_build(table: Table, key: str, mesh: Mesh, *, m_bits: int,
+                     k: int) -> jax.Array:
+    """Distributed bloom build: per-device partial filters OR-merged
+    across the mesh, then held replicated on every device.
+
+    Returns the merged (m_bits/32,) uint32 array — bit-identical to the
+    global-view ``bloom_build`` over the concatenated column, because OR
+    accumulation is order- and partition-invariant. The all_gather +
+    local OR here is the semantic spec of a bitwise-or all-reduce (XLA
+    has no uint32 OR all-reduce primitive); the cost model prices the
+    operation as the reduce tree a real all-reduce executes —
+    ceil(log2 p) rounds of m/8 bytes (``filter_reduce_cost``) — not the
+    gather's (p-1)·m/8.
+    """
+    p = mesh.shape[AXIS]
+
+    def f(col, valid):
+        part = _partial_bloom_words(col[0], valid[0], m_bits, k)
+        parts = jax.lax.all_gather(part, AXIS)        # (p, m_words)
+        merged = parts[0]
+        for i in range(1, p):
+            merged = merged | parts[i]
+        return merged[None]
+
+    words = _shard_map(
+        f, mesh=mesh, in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS),
+    )(table.column(key), table.valid)
+    # Every device holds the identical merged filter; take one replica.
+    return words[0]
 
 
 @functools.partial(jax.jit, static_argnames=("a_key", "b_key", "mesh"))
@@ -143,7 +212,7 @@ def dist_broadcast_hash_join(a: Table, b: Table, a_key: str, b_key: str,
         out_cols, out_valid = _attach(a_cols, a_valid[0], fb_cols, res)
         return ({n: c[None] for n, c in out_cols.items()}, out_valid[None])
 
-    cols, valid = jax.shard_map(
+    cols, valid = _shard_map(
         f, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS)),

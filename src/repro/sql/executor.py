@@ -16,6 +16,7 @@ motivation for adaptivity).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -30,15 +31,16 @@ from ..joins.aggregate import group_aggregate
 from ..joins.exchange import key_skew
 from ..joins.methods import JoinReport, run_equi_join
 from ..joins.table import Table, compact_partitions
-from ..kernels.bloom import bloom_build, bloom_probe
 from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
                       RuntimeFilter, Scan, augment_edges, extract_join_graph,
-                      leaf_retain_fraction)
+                      key_retain_fraction, leaf_retain_fraction)
 from .planner import (JoinStep, catalog_base_stats, catalog_schema,
                       enumerate_join_order, leaf_key_domain,
                       modeled_tree_cost, plan_runtime_filters,
                       prune_projections, push_down_filters)
+from .runtime_filters import (DEFAULT_FILTER_KINDS, build_filter_payload,
+                              probe_filter_mask)
 from .strategies import Strategy
 
 #: Shuffle-family methods: both sides cross the wire, so a probe-side
@@ -46,9 +48,10 @@ from .strategies import Strategy
 _SHUFFLE_FAMILY = (JoinMethod.SHUFFLE_HASH, JoinMethod.SHUFFLE_SORT,
                    JoinMethod.SALTED_SHUFFLE_HASH)
 
-#: Join types whose result survives dropping non-matching probe rows: the
-#: bloom filter never drops a matching row (no false negatives), so these
-#: are exactly the types for which a probe-side filter is semantics-free.
+#: Join types whose result survives dropping non-matching probe rows: no
+#: runtime-filter kind ever drops a matching row (no false negatives), so
+#: these are exactly the types for which a probe-side filter is
+#: semantics-free.
 _FILTERABLE_TYPES = (JoinType.INNER, JoinType.LEFT_SEMI)
 
 
@@ -88,18 +91,21 @@ class JoinDecision:
 
 @dataclasses.dataclass
 class FilterDecision:
-    """Audit record of one planned-and-executed runtime bloom filter."""
+    """Audit record of one planned-and-executed runtime filter (any kind)."""
 
-    plan: RuntimeFilter      # the planner's placement + cost rationale
+    plan: RuntimeFilter      # the planner's placement + kind + cost rationale
     rows_before: int
     rows_after: int
     p: int                   # parallelism the filter was broadcast over
 
     @property
     def network_bytes(self) -> float:
-        """Measured wire cost of the filter: broadcasting its m-bit array
-        to the probe side's p-1 remote tasks (Eq. 1 on m/8 bytes)."""
-        return (self.p - 1) * self.plan.m_bits / 8.0
+        """Measured wire cost of the filter: merging the per-partition
+        partial payloads up the ceil(log2 p) reduce tree, then
+        broadcasting the serialized filter to the probe side's p-1 remote
+        tasks (Eq. 1 on m_bits/8 bytes)."""
+        rounds = math.ceil(math.log2(self.p)) if self.p > 1 else 0
+        return (self.p - 1 + rounds) * self.plan.m_bits / 8.0
 
     @property
     def keep_measured(self) -> float:
@@ -119,7 +125,7 @@ class ExecutionResult:
     #: Sum over joins of their hottest-partition exchange loads — the
     #: skew-sensitive lower bound on stage wall time (straggler metric).
     straggler_bytes: float = 0.0
-    #: Runtime bloom filters that were planned and applied, in order.
+    #: Runtime filters (any kind) that were planned and applied, in order.
     filters: List["FilterDecision"] = dataclasses.field(default_factory=list)
 
     def methods(self):
@@ -171,12 +177,17 @@ class Executor:
         # keeping the paper's strategies bit-identical and measurement-free).
         self.skew_aware = getattr(strategy, "skew_aware", False)
         self.skew_floor = getattr(strategy, "skew_floor", 1.1)
-        # Runtime bloom-filter pushdown (FilteredStrategy): the Executor
-        # plans a filter per join-graph edge with *measured* build-side
-        # statistics and applies it to the probe side below its exchanges.
+        # Runtime-filter pushdown (FilteredStrategy): the Executor plans a
+        # filter (cheapest applicable kind) per join-graph edge with
+        # *measured* build-side statistics and applies it to the probe
+        # side below its exchanges.
         self.runtime_filters = getattr(strategy, "runtime_filters", False)
         self.filter_bits_per_key = getattr(strategy, "bits_per_key",
                                            BLOOM_DEFAULT_BITS_PER_KEY)
+        # Which reducer kinds the planner may quote per edge (FilteredStrategy
+        # narrows this to e.g. ("bloom",) for PR-3-compatible behaviour).
+        self.filter_kinds = getattr(strategy, "filter_kinds",
+                                    DEFAULT_FILTER_KINDS)
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
         # Key-domain denominators for the filter planner's sigma estimate.
@@ -273,14 +284,17 @@ class Executor:
                     build_key: str) -> float:
         """Estimated match fraction when ``leaf`` plays the build role: its
         surviving distinct keys (= measured cardinality; build keys are
-        unique) over the key domain. Falls back to the static retain
-        fraction when no domain is known (e.g. aggregated subqueries)."""
+        unique) over the key domain. Falls back to the static *key* retain
+        fraction when no domain is known (e.g. aggregated subqueries from
+        sources without header FK metadata) — key-aware so a filter on an
+        aggregate's group key, above or below the grouping, still counts
+        (group keys survive grouping)."""
         domain = self.catalog.key_domains.get(build_key)
         if domain is None:
             domain = leaf_key_domain(leaf, self._base_stats)
         if domain and domain > 0:
             return min(max(stat.cardinality, 0.0) / domain, 1.0)
-        return leaf_retain_fraction(leaf)
+        return key_retain_fraction(leaf, build_key)
 
     def _filter_pair(self, left: _Annotated, lstats: TableStats,
                      right: _Annotated, rstats: TableStats,
@@ -290,7 +304,9 @@ class Executor:
         sigma = self._leaf_sigma(node.right, rstats, node.right_key)
         edge = JoinEdge(0, 1, node.left_key, node.right_key)
         plan = plan_runtime_filters([edge], [lstats, rstats], [1.0, sigma],
-                                    self._params, self.filter_bits_per_key)
+                                    self._params, self.filter_bits_per_key,
+                                    leaves=[node.left, node.right],
+                                    kinds=self.filter_kinds)
         if not plan:
             return left, lstats
         left = self._apply_runtime_filter(plan[0], left, right.table)
@@ -306,7 +322,9 @@ class Executor:
             sigmas[e.build] = self._leaf_sigma(graph.leaves[e.build],
                                                stats[e.build], e.build_key)
         plan = plan_runtime_filters(edges, stats, sigmas, self._params,
-                                    self.filter_bits_per_key)
+                                    self.filter_bits_per_key,
+                                    leaves=graph.leaves,
+                                    kinds=self.filter_kinds)
         for rf in plan:
             anns[rf.probe] = self._apply_runtime_filter(
                 rf, anns[rf.probe], anns[rf.build].table)
@@ -316,14 +334,15 @@ class Executor:
 
     def _apply_runtime_filter(self, rf: RuntimeFilter, probe: _Annotated,
                               build: Table) -> _Annotated:
-        """Build the bloom filter from the build side's surviving keys and
-        mask the probe table (no false negatives: only rows that cannot
-        match are dropped). An empty build side yields the all-zero filter,
-        whose mask rejects every probe row — the join result is empty
-        either way."""
-        bits = bloom_build(build.column(rf.build_key), build.valid,
-                           m_bits=rf.m_bits, k=rf.k)
-        keep = bloom_probe(probe.table.column(rf.probe_key), bits, k=rf.k)
+        """Build the planned filter kind from the build side's surviving
+        keys and mask the probe table (no false negatives: only rows that
+        cannot match are dropped). An empty build side yields the
+        reject-everything payload for every kind (zero bloom array, empty
+        zone interval, empty key list) — the join result is empty either
+        way."""
+        payload = build_filter_payload(rf, build)
+        keep = probe_filter_mask(rf, payload,
+                                 probe.table.column(rf.probe_key))
         table = probe.table.with_valid(probe.table.valid & keep)
         measured = table.measure()
         self._filters.append(FilterDecision(rf, probe.table.count(),

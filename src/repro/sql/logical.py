@@ -167,6 +167,73 @@ def leaf_retain_fraction(node: Node) -> float:
     return frac
 
 
+def key_retain_fraction(node: Node, key: str) -> float:
+    """Fraction of ``key``'s domain surviving the leaf's filters, looking
+    *through* aggregates: a group key survives grouping, so a filter on it
+    below the Aggregate still thins the key set the leaf exposes.
+    Below an Aggregate only filters on the group key itself count — a
+    predicate on any other input column thins groups sub-proportionally
+    (a group survives if any of its rows does), so assuming full retention
+    there is the conservative choice."""
+    base, filters = filter_chain(node)
+    frac = 1.0
+    for f in filters:
+        frac *= min(max(f.selectivity, 0.0), 1.0)
+    if isinstance(base, Project):
+        frac *= key_retain_fraction(base.child, key)
+    elif isinstance(base, Aggregate) and base.key == key:
+        frac *= _key_filter_fraction(base.child, key)
+    return frac
+
+
+def _key_filter_fraction(node: Node, key: str) -> float:
+    """Product of selectivities of filters *on ``key`` itself* in a
+    subtree, descending through projections and same-key aggregates."""
+    base, filters = filter_chain(node)
+    frac = 1.0
+    for f in filters:
+        if f.column == key:
+            frac *= min(max(f.selectivity, 0.0), 1.0)
+    if isinstance(base, Project):
+        frac *= _key_filter_fraction(base.child, key)
+    elif isinstance(base, Aggregate) and base.key == key:
+        frac *= _key_filter_fraction(base.child, key)
+    return frac
+
+
+#: Filter ops whose survivors form one contiguous interval of the column.
+_BAND_OPS = ("eq", "lt", "le", "gt", "ge", "between")
+
+
+def key_band_fraction(node: Node, key: str) -> Optional[float]:
+    """Zone-map applicability test: the estimated width of the interval
+    the leaf's surviving ``key`` values span, as a fraction of the domain.
+
+    A leaf is *band-shaped* in its key iff its filter chain constrains the
+    key **itself** with range predicates (TPC-DS date windows filter
+    ``d_date_sk`` between two dates): the surviving key set is then one
+    contiguous interval whose width is the product of those predicates'
+    selectivities — the zone map's kept fraction, exactly. Filters on
+    other columns thin the key set *within* the band but cannot shrink
+    its min/max span, so they do not tighten the estimate. Returns None
+    when no range predicate on the key exists (min/max would span ~the
+    whole domain — a zone map has nothing to cut)."""
+    base, filters = filter_chain(node)
+    frac = None
+    for f in filters:
+        if f.column == key and f.op in _BAND_OPS:
+            s = min(max(f.selectivity, 0.0), 1.0)
+            frac = s if frac is None else frac * s
+    child = None
+    if isinstance(base, Project):
+        child = key_band_fraction(base.child, key)
+    elif isinstance(base, Aggregate) and base.key == key:
+        child = key_band_fraction(base.child, key)
+    if child is not None:
+        frac = child if frac is None else frac * child
+    return frac
+
+
 @dataclasses.dataclass(frozen=True)
 class JoinEdge:
     """One equi-join predicate, oriented probe -> build (unique-key side)."""
@@ -290,7 +357,7 @@ def unique_key_sides(graph: JoinGraph):
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeFilter:
-    """A planned runtime bloom-filter pushdown on one join-graph edge.
+    """A planned runtime-filter pushdown on one join-graph edge.
 
     The filter is built over the build leaf's join-key column and applied
     to the probe leaf's key column *at the leaf* — below every exchange the
@@ -298,19 +365,26 @@ class RuntimeFilter:
     information passing rather than an ordinary join predicate. Edges
     derived through key equivalence classes (``derived=True``) push a
     dimension's filter onto relations it is never directly joined with.
+
+    ``kind`` names the physical filter the planner priced cheapest for the
+    edge — ``"bloom"`` (m-bit array, k hashes), ``"zone_map"`` (min/max
+    interval) or ``"semi_join"`` (exact sorted key list). ``m_bits`` is the
+    *serialized wire size in bits* for every kind (the quantity the cost
+    model broadcasts); ``k`` is bloom's hash count, 0 for the others.
     """
 
     probe: int          # leaf index whose rows are filtered
     build: int          # leaf index whose keys define membership
     probe_key: str
     build_key: str
-    m_bits: int         # filter width (power of two)
-    k: int              # hash count
+    m_bits: int         # serialized filter size in bits
+    k: int              # hash count (bloom) — 0 for other kinds
     sigma_est: float    # estimated true match fraction of probe rows
-    keep_est: float     # max(sigma_est, fpr) — planned kept fraction
+    keep_est: float     # planned kept fraction (kind-specific floor)
     benefit: float      # modeled workload saved on the filtered join
-    cost: float         # modeled workload of broadcasting the filter
+    cost: float         # modeled workload of building + shipping the filter
     derived: bool = False
+    kind: str = "bloom"
 
 
 def augment_edges(graph: JoinGraph):

@@ -29,17 +29,16 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod, bloom_fpr, bloom_params,
-                               filtered_probe_fraction, method_cost,
-                               runtime_filter_cost)
+                               JoinMethod, method_cost)
 from ..core.selection import JoinProperties, JoinType, select_join_method
 from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
                           estimate_join, estimate_project)
 from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
                       RuntimeFilter, Scan, Schema, augment_edges,
-                      extract_join_graph, filter_chain, leaf_columns,
-                      leaf_retain_fraction)
+                      extract_join_graph, filter_chain, key_band_fraction,
+                      leaf_columns, leaf_retain_fraction)
+from .runtime_filters import DEFAULT_FILTER_KINDS, FILTER_KINDS
 
 #: Static guess for an aggregate's group count as a fraction of input rows
 #: (used only when no runtime statistic exists yet; exchange boundaries
@@ -288,20 +287,28 @@ def leaf_key_domain(node: Node, base_stats: Dict[str, TableStats]
 
 def plan_runtime_filters(edges, leaf_stats: List[TableStats],
                          sigmas: List[float], params: CostParams,
-                         bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY
+                         bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY,
+                         leaves: Optional[List[Node]] = None,
+                         kinds=DEFAULT_FILTER_KINDS
                          ) -> List[RuntimeFilter]:
-    """Decide bloom-filter placement per join-graph edge.
+    """Decide runtime-filter placement + kind per join-graph edge.
 
     ``sigmas[i]`` is leaf i's estimated match fraction when it plays the
     build role: the share of the probe side's key domain its surviving keys
     cover (measured build cardinality / domain when the executor calls
-    this, the static retain fraction in the planner). An edge gets a filter
-    iff the filtered join plus the filter's broadcast cost is *strictly*
-    cheaper under the RelJoin cost model than the unfiltered join — so at
-    sigma = 1 (unfiltered build) nothing is ever planned and selections are
-    byte-identical to the paper's. Edges derived through key equivalence
-    classes participate too: that is what pushes a dimension's filter below
-    exchanges of relations it never directly joins.
+    this, the static retain fraction in the planner). Every kind in
+    ``kinds`` quotes the edge (bloom always; zone map only when ``leaves``
+    lets the band test see a range predicate on the build key; semi-join
+    always, priced by its exact key list) and the strictly cheapest quote
+    wins — ties resolve to the earliest kind in ``kinds``, which keeps the
+    bloom-only behaviour bit-stable under the default order. An edge gets
+    its winning filter iff the filtered join plus the filter's build +
+    broadcast cost is *strictly* cheaper under the RelJoin cost model than
+    the unfiltered join — so at sigma = 1 (unfiltered build) nothing is
+    ever planned and selections are byte-identical to the paper's. Edges
+    derived through key equivalence classes participate too: that is what
+    pushes a dimension's filter below exchanges of relations it never
+    directly joins.
     """
     out: List[RuntimeFilter] = []
     seen = set()
@@ -311,21 +318,31 @@ def plan_runtime_filters(edges, leaf_stats: List[TableStats],
             continue
         seen.add(ident)
         a, b = leaf_stats[e.probe], leaf_stats[e.build]
-        n = max(b.cardinality, 0.0)
-        m_bits, k = bloom_params(n, bits_per_key)
-        fpr = bloom_fpr(n, m_bits, k)
-        keep = filtered_probe_fraction(sigmas[e.build], fpr)
-        if keep >= 1.0 or a.cardinality <= 0:
+        if a.cardinality <= 0:
             continue
+        n = max(b.cardinality, 0.0)
+        band = (key_band_fraction(leaves[e.build], e.build_key)
+                if leaves is not None else None)
         _, unfiltered = _step(a, b, params)
-        _, filtered = _step(a.scaled(keep), b, params)
-        fcost = runtime_filter_cost(m_bits, params)
-        if filtered + fcost < unfiltered * (1 - 1e-9):
+        best = None          # (total, quote, filtered_cost)
+        for kname in kinds:
+            quote = FILTER_KINDS[kname].quote(n, sigmas[e.build], band,
+                                              bits_per_key, params)
+            if quote is None or quote.keep_est >= 1.0:
+                continue
+            _, filtered = _step(a.scaled(quote.keep_est), b, params)
+            total = filtered + quote.cost
+            if best is None or total < best[0]:
+                best = (total, quote, filtered)
+        if best is None:
+            continue
+        total, quote, filtered = best
+        if total < unfiltered * (1 - 1e-9):
             out.append(RuntimeFilter(e.probe, e.build, e.probe_key,
-                                     e.build_key, m_bits, k,
-                                     sigmas[e.build], keep,
-                                     unfiltered - filtered, fcost,
-                                     derived=e.derived))
+                                     e.build_key, quote.bits, quote.k,
+                                     sigmas[e.build], quote.keep_est,
+                                     unfiltered - filtered, quote.cost,
+                                     derived=e.derived, kind=quote.kind))
     return out
 
 

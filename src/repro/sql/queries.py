@@ -270,17 +270,56 @@ def q21_catalog_filtered_dates() -> Node:
     return Aggregate(j, "c_region", (("cs_sales_price", "sum"),))
 
 
+# ---------------------------------------------------------------------------
+# Filter-kind targets (runtime-filter *framework*): queries whose cheapest
+# reducer is provably not a bloom filter, exercising the per-edge kind
+# selection. q22's dimension predicate is a range on the join key itself
+# (a TPC-DS date window filters d_date_sk between two dates), so the
+# surviving keys are one contiguous band — the 8-byte min/max zone map
+# keeps the same fraction as a bloom filter at a fraction of its broadcast
+# cost. q23's build side survives as a handful of stores, so the exact
+# sorted key list (32n bits, n ~ 5) undercuts even the minimum-size bloom
+# array (256 bits) with zero false positives — the semi-join reducer wins.
+# ---------------------------------------------------------------------------
+
+
+def q22_zone_map_window() -> Node:
+    """Date-window star: range predicate on the join key itself -> the
+    dimension's surviving keys form one band and the zone map is the
+    cheapest reducer. The unfiltered customer shuffle runs *first* in plan
+    order, so only the leaf-level zone map — pushed below that exchange —
+    can thin it to ~25% of the fact."""
+    f = Filter(Scan("date_dim"), "d_date_sk", "lt", 90,
+               selectivity=90 / 365)
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, f, "ss_sold_date_sk", "d_date_sk")
+    return Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
+
+
+def q23_semi_join_stores() -> Node:
+    """Tiny exact key set: ~5 of 60 stores survive the state predicate, so
+    the semi-join reducer's key list is smaller than the minimum bloom
+    array. Like q22, the customer shuffle runs first: the semi-join filter
+    on the store key, applied at the fact leaf, ships only ~8% of it."""
+    f = Filter(Scan("store"), "s_state", "eq", 0, selectivity=1 / 12)
+    j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
+    j = Join(j, f, "ss_store_sk", "s_store_sk")
+    return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
+
+
 def filtered_queries() -> Dict[str, Node]:
     return {
         "q19_filtered_customer": q19_filtered_customer(),
         "q20_filter_below_earlier_exchange": q20_filter_below_earlier_exchange(),
         "q21_catalog_filtered_dates": q21_catalog_filtered_dates(),
+        "q22_zone_map_window": q22_zone_map_window(),
+        "q23_semi_join_stores": q23_semi_join_stores(),
     }
 
 
 def every_query() -> Dict[str, Node]:
     """The 12 baseline plans plus the 3 mis-ordered planner targets.
-    (The skewed q16-q18 and filter-friendly q19-q21 are separate: they
+    (The skewed q16-q18 and filter-friendly q19-q23 are separate: they
     target specific catalogs/strategies — see ``skewed_queries()`` /
     ``filtered_queries()`` and bench_skew / bench_filters.)"""
     out = all_queries()

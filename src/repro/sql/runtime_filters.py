@@ -1,0 +1,165 @@
+"""Pluggable runtime-filter kinds (sideways information passing framework).
+
+PR 3 hard-wired one reducer — the bloom pair — into planner and executor.
+This module turns that into a *framework*: a ``RuntimeFilterKind`` knows
+how to
+
+  * **quote** itself for a join-graph edge (serialized wire size, planned
+    kept fraction, build+broadcast workload under the RelJoin cost model),
+  * **build** its payload from the build side's surviving join keys, and
+  * **probe** a key column into a keep-mask (never a false negative).
+
+so ``plan_runtime_filters`` can price every applicable kind per edge and
+keep the strictly cheapest — the same relative-cost selection Algorithm 1
+applies to join methods, applied to reducers:
+
+    kind        wire size      kept fraction        applicable when
+    ---------   ------------   ------------------   --------------------
+    bloom       m ~ 10n bits   max(sigma, fpr)      always
+    zone_map    64 bits        band width           key set band-shaped
+    semi_join   32n bits       sigma (exact)        key list small
+
+Every payload is a pure function of the build key *set* (order- and
+duplication-invariant), and every probe mask admits false positives only —
+the two properties result preservation rests on. An empty build side
+yields the reject-everything payload for every kind (zero bloom array,
+empty zone interval, empty key list).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from ..core.cost_model import (CostParams, SEMI_JOIN_BITS_PER_KEY,
+                               ZONE_MAP_BITS, bloom_fpr, bloom_params,
+                               bloom_total_cost, filtered_probe_fraction,
+                               semi_join_cost, zone_map_cost)
+from ..core.psts import key_set, semi_join_mask
+from ..joins.table import Table
+from ..kernels.bloom import bloom_build, bloom_probe
+from ..kernels.zone_map import key_range, range_probe
+from .logical import RuntimeFilter
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterQuote:
+    """One kind's offer for one edge: what it ships, what it keeps, what
+    it costs to build + broadcast (cost-model workload units)."""
+
+    kind: str
+    bits: int           # serialized wire size
+    k: int              # bloom hash count (0 otherwise)
+    keep_est: float     # planned kept fraction of the probe side
+    cost: float         # reduce-tree + broadcast workload
+
+
+class RuntimeFilterKind:
+    """Protocol of one pluggable reducer. Subclasses are stateless."""
+
+    name: str = "base"
+
+    def quote(self, n_keys: float, sigma: float, band: Optional[float],
+              bits_per_key: int, params: CostParams
+              ) -> Optional[FilterQuote]:
+        """Price this kind for an edge; None when not applicable.
+        ``n_keys`` is the estimated distinct build-key count, ``sigma``
+        the estimated match fraction, ``band`` the band-width fraction of
+        the build leaf's key set (None = not band-shaped)."""
+        raise NotImplementedError
+
+    def build(self, build: Table, key: str, rf: RuntimeFilter):
+        """Payload from the build side's surviving keys (a jax pytree)."""
+        raise NotImplementedError
+
+    def probe(self, keys: jax.Array, payload, rf: RuntimeFilter
+              ) -> jax.Array:
+        """Keep-mask of ``keys`` against a payload (no false negatives)."""
+        raise NotImplementedError
+
+
+class BloomKind(RuntimeFilterKind):
+    """PR 3's bit-packed bloom pair: always applicable, densest encoding
+    (~10 bits/key), kept fraction floored by the false-positive rate."""
+
+    name = "bloom"
+
+    def quote(self, n_keys, sigma, band, bits_per_key, params):
+        m_bits, k = bloom_params(n_keys, bits_per_key)
+        keep = filtered_probe_fraction(sigma, bloom_fpr(n_keys, m_bits, k))
+        return FilterQuote(self.name, m_bits, k, keep,
+                           bloom_total_cost(m_bits, params))
+
+    def build(self, build, key, rf):
+        return bloom_build(build.column(key), build.valid,
+                           m_bits=rf.m_bits, k=rf.k)
+
+    def probe(self, keys, payload, rf):
+        return bloom_probe(keys, payload, k=rf.k)
+
+
+class ZoneMapKind(RuntimeFilterKind):
+    """Min/max interval (8 bytes on the wire): applicable when the build
+    leaf's surviving keys are band-shaped — a range predicate on the key
+    itself — where it keeps exactly the band at the lowest possible
+    broadcast cost."""
+
+    name = "zone_map"
+
+    def quote(self, n_keys, sigma, band, bits_per_key, params):
+        if band is None:
+            return None
+        keep = min(max(band, 0.0), 1.0)
+        return FilterQuote(self.name, ZONE_MAP_BITS, 0, keep,
+                           zone_map_cost(params))
+
+    def build(self, build, key, rf):
+        return key_range(build.column(key), build.valid)
+
+    def probe(self, keys, payload, rf):
+        return range_probe(keys, payload)
+
+
+class SemiJoinKind(RuntimeFilterKind):
+    """Exact semi-join reducer over the distinct-key machinery in
+    ``core.psts``: ships the sorted key list (32 bits/key), keeps exactly
+    sigma. Beats bloom when the key list is small enough that exactness
+    outprices the denser encoding — high-selectivity, small-domain
+    dimensions."""
+
+    name = "semi_join"
+
+    def quote(self, n_keys, sigma, band, bits_per_key, params):
+        bits = int(max(n_keys, 0.0) * SEMI_JOIN_BITS_PER_KEY)
+        keep = min(max(sigma, 0.0), 1.0)
+        return FilterQuote(self.name, bits, 0, keep,
+                           semi_join_cost(n_keys, params))
+
+    def build(self, build, key, rf):
+        return key_set(build.column(key), build.valid)
+
+    def probe(self, keys, payload, rf):
+        sorted_keys, n = payload
+        return semi_join_mask(keys, sorted_keys, n)
+
+
+FILTER_KINDS: Dict[str, RuntimeFilterKind] = {
+    k.name: k for k in (BloomKind(), ZoneMapKind(), SemiJoinKind())
+}
+
+#: Planner's default scoring order. Bloom first: on an exact cost tie the
+#: earlier kind wins, which keeps PR-3 decisions bit-stable.
+DEFAULT_FILTER_KINDS: Tuple[str, ...] = ("bloom", "zone_map", "semi_join")
+
+
+def build_filter_payload(rf: RuntimeFilter, build: Table):
+    """Materialize the planned filter from the build side's live keys."""
+    return FILTER_KINDS[rf.kind].build(build, rf.build_key, rf)
+
+
+def probe_filter_mask(rf: RuntimeFilter, payload, keys: jax.Array
+                      ) -> jax.Array:
+    """Keep-mask of a probe-side key column against a built payload."""
+    return FILTER_KINDS[rf.kind].probe(keys, payload, rf)

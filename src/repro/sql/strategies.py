@@ -9,6 +9,7 @@ from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
 from ..core.selection import (JoinProperties, Selection, select_absolute_size,
                               select_forced, select_join_method)
 from ..core.stats import DEFAULT_WATERMARK_BYTES, TableStats
+from .runtime_filters import DEFAULT_FILTER_KINDS
 
 
 class Strategy:
@@ -21,10 +22,11 @@ class Strategy:
     #: attaches it to the runtime statistics, enabling the straggler-aware
     #: costs and the salted shuffle method.
     skew_aware: bool = False
-    #: When True the Executor plans runtime bloom-filter pushdown: build a
-    #: filter over the build side's join keys at its exchange boundary and
-    #: apply it to the probe side *below* its exchanges, wherever the cost
-    #: model says the filtered join plus the filter's broadcast is strictly
+    #: When True the Executor plans runtime-filter pushdown: build a filter
+    #: (cheapest applicable kind — bloom / zone map / semi-join) over the
+    #: build side's join keys at its exchange boundary and apply it to the
+    #: probe side *below* its exchanges, wherever the cost model says the
+    #: filtered join plus the filter's build + broadcast is strictly
     #: cheaper.
     runtime_filters: bool = False
 
@@ -135,6 +137,8 @@ class ReorderingStrategy(Strategy):
         self.runtime_filters = getattr(self.inner, "runtime_filters", False)
         self.bits_per_key = getattr(self.inner, "bits_per_key",
                                     BLOOM_DEFAULT_BITS_PER_KEY)
+        self.filter_kinds = getattr(self.inner, "filter_kinds",
+                                    DEFAULT_FILTER_KINDS)
         if self.w is None:
             self.w = getattr(self.inner, "w", 1.0)
 
@@ -144,29 +148,35 @@ class ReorderingStrategy(Strategy):
 
 @dataclasses.dataclass
 class FilteredStrategy(Strategy):
-    """Wrapper adding runtime bloom-filter pushdown to any baseline.
+    """Wrapper adding runtime-filter pushdown to any baseline.
 
     Method selection is delegated to the wrapped strategy unchanged; the
-    Executor, seeing ``runtime_filters=True``, additionally plans a bloom
-    filter per join-graph edge (``planner.plan_runtime_filters``): built
-    from the build side's surviving join keys at its exchange boundary,
-    applied to the probe relation's key column at the *leaf* — below every
-    exchange the probe side later goes through — and only where the cost
-    model prices the filtered join plus the filter's broadcast strictly
-    below the unfiltered join. With every sigma estimate at 1 (no selective
-    dimension predicate) nothing is planned and the wrapped strategy's
-    selections are byte-identical.
+    Executor, seeing ``runtime_filters=True``, additionally plans a runtime
+    filter per join-graph edge (``planner.plan_runtime_filters``): every
+    kind in ``kinds`` — bloom array, min/max zone map, exact semi-join key
+    list — quotes the edge and the strictly cheapest wins. The filter is
+    built from the build side's surviving join keys at its exchange
+    boundary, applied to the probe relation's key column at the *leaf* —
+    below every exchange the probe side later goes through — and only
+    where the cost model prices the filtered join plus the filter's build
+    + broadcast strictly below the unfiltered join. With every sigma
+    estimate at 1 (no selective dimension predicate) nothing is planned
+    and the wrapped strategy's selections are byte-identical.
     """
 
     inner: Strategy = dataclasses.field(default_factory=lambda:
                                         RelJoinStrategy())
-    #: Filter budget: bits per distinct build-side key (m is the next power
+    #: Bloom budget: bits per distinct build-side key (m is the next power
     #: of two; k the optimal ln2 * m/n).
     bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY
+    #: Reducer kinds the planner may quote, in tie-break order.
+    #: ``("bloom",)`` restricts the framework to bloom-only quoting.
+    kinds: tuple = DEFAULT_FILTER_KINDS
 
     def __post_init__(self):
         self.name = f"Filtered({self.inner.name})"
         self.runtime_filters = True
+        self.filter_kinds = tuple(self.kinds)
         # Forward the wrapped strategy's executor-facing flags so
         # Filtered(Reorder(...)) / Filtered(SkewAware(...)) compose.
         self.reorder = getattr(self.inner, "reorder", False)

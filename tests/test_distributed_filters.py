@@ -1,0 +1,73 @@
+"""Distributed bloom build: per-device partial filters OR-reduced across
+the mesh must be bit-identical to the global-view ``bloom_build`` — across
+device counts. The 1-device mesh runs in every tier; the 8-device cases
+run in the multi-device CI tier (XLA_FLAGS=--xla_force_host_platform_
+device_count=8) and are skipped where fewer devices exist.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import bloom_params
+from repro.joins import from_numpy, partition_round_robin
+from repro.joins.distributed import dist_bloom_build, make_join_mesh, place
+from repro.kernels.bloom import bloom_build, bloom_build_ref
+
+
+def _stacked(p, n=1000, seed=3, hole_frac=0.2):
+    """Placed p-partition key table with a masked-out fraction of rows
+    (post-filter survivors), plus sized bloom parameters."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(-(1 << 28), 1 << 28, n).astype(np.int32)
+    t = from_numpy({"k": keys,
+                    "payload": rng.integers(0, 99, n).astype(np.int32)})
+    valid = np.asarray(t.valid) & (rng.random(n) >= hole_frac)
+    t = t.with_valid(jnp.asarray(valid))
+    mesh = make_join_mesh(p)
+    stacked = place(partition_round_robin(t, p), mesh)
+    m, k = bloom_params(len(np.unique(keys[valid])))
+    return stacked, mesh, m, k
+
+
+def _global_words(stacked, m, k):
+    """Global-view build over the same (padded, masked) key material."""
+    return np.asarray(bloom_build(np.asarray(stacked.column("k")),
+                                  np.asarray(stacked.valid),
+                                  m_bits=m, k=k))
+
+
+def test_dist_build_bit_identical_to_global_single_device():
+    stacked, mesh, m, k = _stacked(p=1)
+    words = np.asarray(dist_bloom_build(stacked, "k", mesh, m_bits=m, k=k))
+    assert (words == _global_words(stacked, m, k)).all()
+    assert (words == bloom_build_ref(np.asarray(stacked.column("k")),
+                                     np.asarray(stacked.valid),
+                                     m_bits=m, k=k)).all()
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (multi-device CI tier)")
+def test_dist_build_bit_identical_to_global_8_devices():
+    """The OR-reduce is partition-invariant: the 8-way distributed build
+    equals the global build bit for bit — and therefore also equals the
+    1-device distributed build (device-count invariance {1, 8})."""
+    stacked, mesh, m, k = _stacked(p=8)
+    words = np.asarray(dist_bloom_build(stacked, "k", mesh, m_bits=m, k=k))
+    assert (words == _global_words(stacked, m, k)).all()
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (multi-device CI tier)")
+def test_dist_build_empty_partitions_are_neutral():
+    """Partitions holding no live rows contribute the zero partial — the
+    merged filter is unchanged by how rows land on devices."""
+    stacked, mesh, m, k = _stacked(p=8, n=64, hole_frac=0.0)
+    # Kill partitions 3..7 entirely.
+    valid = np.asarray(stacked.valid).copy()
+    valid[3:] = False
+    dead = stacked.with_valid(jnp.asarray(valid))
+    words = np.asarray(dist_bloom_build(dead, "k", mesh, m_bits=m, k=k))
+    assert (words == _global_words(dead, m, k)).all()
