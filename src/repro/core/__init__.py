@@ -6,11 +6,12 @@ tensor-op planner that applies the same cost model to sharded-LM collectives.
 from .cost_model import (CostParams, JoinMethod, RANK, all_costs,
                          bloom_total_cost, broadcast_hash_cost,
                          broadcast_nl_cost, broadcast_preferred,
-                         cartesian_cost, default_salt_factor,
-                         filter_reduce_cost, k0_threshold, method_cost,
-                         relative_size, salted_shuffle_hash_cost,
-                         semi_join_cost, shuffle_hash_cost,
-                         shuffle_sort_cost, zone_map_cost)
+                         cached_filter_cost, cartesian_cost,
+                         default_salt_factor, filter_reduce_cost,
+                         k0_threshold, method_cost, relative_size,
+                         salted_shuffle_hash_cost, semi_join_cost,
+                         shuffle_hash_cost, shuffle_sort_cost,
+                         zone_map_cost)
 from .psts import (PSTSReport, compute_psts, distinct_count, key_set,
                    selections_differ, semi_join_mask)
 from .selection import (AQE_BROADCAST_THRESHOLD_BYTES, INNER_LIKE,
@@ -24,8 +25,8 @@ from .stats import (DEFAULT_WATERMARK_BYTES, StatsSource, TableStats,
 __all__ = [
     "CostParams", "JoinMethod", "RANK", "all_costs", "bloom_total_cost",
     "broadcast_hash_cost", "broadcast_nl_cost", "broadcast_preferred",
-    "cartesian_cost", "default_salt_factor", "filter_reduce_cost",
-    "k0_threshold", "method_cost", "relative_size",
+    "cached_filter_cost", "cartesian_cost", "default_salt_factor",
+    "filter_reduce_cost", "k0_threshold", "method_cost", "relative_size",
     "salted_shuffle_hash_cost", "semi_join_cost", "shuffle_hash_cost",
     "shuffle_sort_cost", "zone_map_cost", "PSTSReport", "compute_psts",
     "distinct_count", "key_set", "selections_differ", "semi_join_mask",

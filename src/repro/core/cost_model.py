@@ -20,6 +20,29 @@ import enum
 import math
 from typing import Dict
 
+#: The module's public surface. docs/cost_model.md documents every name
+#: listed here (pinned by tests/test_docs.py — extend both together).
+__all__ = [
+    "JoinMethod", "RANK", "CostParams",
+    # phase workloads (Eqs. 1-12)
+    "broadcast_workload", "build_workload_broadcast", "probe_workload",
+    "shuffle_workload", "sort_workload", "merge_workload",
+    "build_workload_shuffle", "nl_workload_broadcast",
+    "nl_workload_cartesian",
+    # overall method costs (Eqs. 4, 8, 10, §3.5) + skew extension
+    "broadcast_hash_cost", "shuffle_hash_cost", "shuffle_sort_cost",
+    "default_salt_factor", "salted_shuffle_hash_cost", "broadcast_nl_cost",
+    "cartesian_cost", "method_cost", "all_costs",
+    # runtime-filter costs (bloom / zone-map / semi-join / cache)
+    "BLOOM_DEFAULT_BITS_PER_KEY", "BLOOM_MIN_BITS", "BLOOM_MAX_HASHES",
+    "ZONE_MAP_BITS", "SEMI_JOIN_BITS_PER_KEY",
+    "bloom_params", "bloom_fpr", "runtime_filter_cost",
+    "filter_reduce_cost", "cached_filter_cost", "filtered_probe_fraction",
+    "zone_map_cost", "semi_join_cost", "bloom_total_cost",
+    # the relative-size criterion (Eq. 13)
+    "k0_threshold", "relative_size", "broadcast_preferred",
+]
+
 
 class JoinMethod(enum.Enum):
     """Physical distributed join methods modeled by the paper, plus the
@@ -313,16 +336,41 @@ def runtime_filter_cost(m_bits: int, params: CostParams) -> float:
     return params.w * (params.p - 1) * m_bits / 8.0
 
 
-def filter_reduce_cost(m_bits: int, params: CostParams) -> float:
+def filter_reduce_cost(m_bits: int, params: CostParams,
+                       kind: str = "bloom") -> float:
     """Workload of the distributed filter *build*: the build side's p
     partitions hold disjoint key subsets, so each builds a partial filter
-    and the partials are merged up a binary reduce tree (OR for bloom
-    words, min/max for zone maps, set-union for semi-join key lists) —
-    ceil(log2 p) rounds of m/8 bytes on the wire, network-weighted by w.
-    Zero at p = 1 (the global build needs no merge)."""
+    and the partials are merged across the mesh. The merge's wire shape —
+    and therefore its charge — depends on the kind:
+
+      * ``"bloom"`` / ``"zone_map"``: the partial payload has the *same*
+        serialized size as the merged one (an m-bit array under OR, a
+        64-bit interval under min/max), so the merge is a binary reduce
+        tree — ceil(log2 p) rounds of m/8 bytes.
+      * ``"semi_join"``: the partial key lists are disjoint subsets whose
+        union *is* the payload, so no mid-tree merge can compress them;
+        the distributed build is an all_gather whose volume is (p-1)·m/8
+        bytes (Eq. 1's convention applied to the gathered list), the same
+        shape ``dist_key_set_build`` executes.
+
+    Network-weighted by w; zero at p = 1 (a global build needs no merge).
+    """
     if params.p <= 1:
         return 0.0
+    if kind == "semi_join":
+        return params.w * (params.p - 1) * m_bits / 8.0
     return params.w * math.ceil(math.log2(params.p)) * m_bits / 8.0
+
+
+def cached_filter_cost(m_bits: int, params: CostParams) -> float:
+    """Quote for a cross-query cache *hit*: the payload already exists
+    (built and merged by an earlier query), so the build + reduce terms
+    drop and only the per-query broadcast to the probe side's tasks
+    remains. This is what makes the planner select cached filters more
+    aggressively than cold ones — a borderline edge whose reduce tree
+    priced it out on a cold cache clears the strictly-cheaper gate once
+    the filter is free to re-ship."""
+    return runtime_filter_cost(m_bits, params)
 
 
 def filtered_probe_fraction(sigma_est: float, fpr: float) -> float:
@@ -351,25 +399,26 @@ def zone_map_cost(params: CostParams) -> float:
     when the build side's surviving keys are band-shaped, else its keep
     fraction degenerates toward 1."""
     return (runtime_filter_cost(ZONE_MAP_BITS, params)
-            + filter_reduce_cost(ZONE_MAP_BITS, params))
+            + filter_reduce_cost(ZONE_MAP_BITS, params, kind="zone_map"))
 
 
 def semi_join_cost(n_keys: float, params: CostParams) -> float:
     """Total workload of an exact semi-join reducer over ``n_keys``
-    distinct build keys: union the per-partition key lists up the reduce
-    tree, then broadcast the n*32-bit list. No false-positive floor — the
-    kept fraction is exactly sigma — so it beats bloom when the key list
-    is small enough that exactness outprices the denser encoding."""
+    distinct build keys: all_gather the disjoint per-partition key lists
+    ((p-1)·n·32/8 bytes — see :func:`filter_reduce_cost`), then broadcast
+    the merged n*32-bit list. No false-positive floor — the kept fraction
+    is exactly sigma — so it beats bloom when the key list is small
+    enough that exactness outprices the denser encoding."""
     bits = max(n_keys, 0.0) * SEMI_JOIN_BITS_PER_KEY
     return (runtime_filter_cost(bits, params)
-            + filter_reduce_cost(bits, params))
+            + filter_reduce_cost(bits, params, kind="semi_join"))
 
 
 def bloom_total_cost(m_bits: int, params: CostParams) -> float:
     """Total workload of a bloom filter: OR-reduce the per-partition
     partial bit arrays up the tree, then broadcast the merged m bits."""
     return (runtime_filter_cost(m_bits, params)
-            + filter_reduce_cost(m_bits, params))
+            + filter_reduce_cost(m_bits, params, kind="bloom"))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,18 @@ participate?* — so the distinct-key helpers live here: ``key_set`` folds a
 membership structure, ``distinct_count`` sizes it, and ``semi_join_mask``
 is the exact probe — the zero-false-positive reducer the runtime-filter
 planner weighs against bloom filters and zone maps.
+
+**Distributed-equivalence contract.** ``key_set`` is a pure function of
+the key *set* (order- and duplication-invariant, canonical sorted
+serialization), which makes it the merge operator of its own distributed
+build: ``joins.distributed.dist_key_set_build`` runs ``key_set`` per
+device, all_gathers the partial lists, and merge-dedupes with a second
+``key_set`` pass — value-identical (array and count) to the global
+``key_set`` over the concatenated column at any device count, because
+distinct-of-union equals union-of-distincts. ``semi_join_mask`` therefore
+produces the same probe mask whether its key set was built globally or
+distributed — the property the runtime-filter executor and the
+cross-query ``FilterCache`` both rest on.
 """
 
 from __future__ import annotations

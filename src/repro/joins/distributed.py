@@ -13,12 +13,27 @@ CPU CI container this runs on ``--xla_force_host_platform_device_count``
 placeholder devices (see tests/test_distributed_join.py); on a real cluster
 the identical program spans pods.
 
-``dist_bloom_build`` is the distributed runtime-filter build: each device
-folds its own partition's join keys into a partial bloom filter, the
-partials are OR-merged across the mesh (an all-reduce tree over the bitwise
-or — the ``filter_reduce_cost`` term the cost model charges), and every
-device ends up holding the merged array, bit-identical to the global-view
-``kernels.bloom.bloom_build`` of the whole column.
+Every runtime-filter kind also gets its **distributed build** here, one
+per reducer:
+
+    dist_bloom_build      partial bloom arrays, OR-merged      (bloom)
+    dist_zone_map_build   per-device (min, max), min/max merge (zone_map)
+    dist_key_set_build    per-device distinct keys, all_gather
+                          + merge-dedupe                       (semi_join)
+
+All three share one **distributed-equivalence contract**: the distributed
+build's result is bit-/value-identical to the corresponding global-view
+build (``kernels.bloom.bloom_build``, ``kernels.zone_map.key_range``,
+``core.psts.key_set``) over the concatenated column, at *any* device
+count — because each merge operator (bitwise OR, elementwise min/max,
+sorted set-union) is associative, commutative, and neutral on empty
+partitions, the result cannot depend on how rows land on devices.
+``tests/test_distributed_filters.py`` pins the contract at device counts
+{1, 8}. The cost model charges each build its actual merge shape
+(``filter_reduce_cost(kind=...)``): a ceil(log2 p) reduce tree for the
+constant-size bloom/zone-map payloads, the (p-1)·m/8 all_gather volume
+for the semi-join key lists, whose disjoint partials cannot be compressed
+mid-tree.
 """
 
 from __future__ import annotations
@@ -31,7 +46,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..core.psts import key_set
 from ..kernels.bloom import _positions
+from ..kernels.zone_map import _HI_IDENT, _LO_IDENT, merge_ranges
 from .local_join import hash_join, sort_join
 from .slots import (SHUFFLE_SEED, gather_rows, hash32, pair_capacity,
                     slot_scatter)
@@ -198,6 +215,74 @@ def dist_bloom_build(table: Table, key: str, mesh: Mesh, *, m_bits: int,
     )(table.column(key), table.valid)
     # Every device holds the identical merged filter; take one replica.
     return words[0]
+
+
+@functools.partial(jax.jit, static_argnames=("key", "mesh"))
+def dist_zone_map_build(table: Table, key: str, mesh: Mesh) -> jax.Array:
+    """Distributed zone-map build: per-device (min, max) partial intervals
+    merged across the mesh with an elementwise min/max reduce.
+
+    Returns the merged int32 ``(2,)`` interval — value-identical to the
+    global-view ``kernels.zone_map.key_range`` over the concatenated
+    column at any device count: min/max is associative and commutative,
+    and an empty (all-invalid) partition contributes the empty-interval
+    identity ``[INT32_MAX, INT32_MIN]``, which is neutral under the
+    merge. As with ``dist_bloom_build``, the all_gather + local fold is
+    the semantic spec of the min/max all-reduce tree the cost model
+    charges — ceil(log2 p) rounds of the 8-byte payload
+    (``filter_reduce_cost(ZONE_MAP_BITS, kind="zone_map")``).
+    """
+
+    def f(col, valid):
+        flat = col[0].reshape(-1).astype(jnp.int32)
+        v = valid[0].reshape(-1)
+        part = jnp.stack([
+            jnp.min(jnp.where(v, flat, jnp.int32(_LO_IDENT))),
+            jnp.max(jnp.where(v, flat, jnp.int32(_HI_IDENT)))])
+        parts = jax.lax.all_gather(part, AXIS)        # (p, 2)
+        return merge_ranges(parts)[None]
+
+    out = _shard_map(
+        f, mesh=mesh, in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS),
+    )(table.column(key), table.valid)
+    # Every device holds the identical merged interval; take one replica.
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("key", "mesh"))
+def dist_key_set_build(table: Table, key: str, mesh: Mesh
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Distributed semi-join build: per-device *distinct* key lists,
+    all_gather + merge-dedupe on the sorted machinery in ``core.psts``.
+
+    Each device first folds its own partition into a local ``key_set``
+    (sorted distinct live keys + sentinel padding) — local dedupe before
+    the exchange, so duplicated hot keys are shipped once per device, not
+    once per row. The padded partial lists are then all_gathered — the
+    (p-1)·m/8-byte wire volume ``filter_reduce_cost(kind="semi_join")``
+    charges — and merge-deduped with a second ``key_set`` pass over the
+    gathered material, masking each partial to its live prefix.
+
+    Returns ``(sorted_keys, n_distinct)`` with the same static shape as —
+    and value-identical to — the global-view ``key_set`` over the
+    concatenated column at any device count: distinct-of-union equals
+    union-of-distincts, and sorting canonicalizes the order.
+    """
+
+    def f(col, valid):
+        local, n_local = key_set(col[0], valid[0])
+        gathered = jax.lax.all_gather(local, AXIS)     # (p, cap)
+        counts = jax.lax.all_gather(n_local, AXIS)     # (p,)
+        live = (jnp.arange(gathered.shape[1])[None, :] < counts[:, None])
+        merged, n = key_set(gathered.reshape(-1), live.reshape(-1))
+        return merged[None], n[None]
+
+    keys, n = _shard_map(
+        f, mesh=mesh, in_specs=(P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS)),
+    )(table.column(key), table.valid)
+    # Every device holds the identical merged key set; take one replica.
+    return keys[0], n[0]
 
 
 @functools.partial(jax.jit, static_argnames=("a_key", "b_key", "mesh"))

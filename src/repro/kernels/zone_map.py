@@ -84,6 +84,16 @@ def key_range(keys: jax.Array, valid: jax.Array | None = None, *,
     return out[0]
 
 
+def merge_ranges(parts: jax.Array) -> jax.Array:
+    """Merge stacked ``(k, 2)`` partial intervals into one ``(2,)`` zone
+    map: elementwise min of the mins, max of the maxes. The min/max merge
+    is associative, commutative and has the empty interval as identity, so
+    any merge order — a reduce tree, an all_gather + local fold, or this
+    single fused reduce — yields the same interval: the distributed-build
+    equivalence ``dist_zone_map_build`` rests on."""
+    return jnp.stack([jnp.min(parts[:, 0]), jnp.max(parts[:, 1])])
+
+
 def range_probe(keys: jax.Array, lo_hi: jax.Array) -> jax.Array:
     """Keep-mask of ``keys`` against a ``key_range`` interval: True iff
     lo <= key <= hi. Exact for band-shaped build key sets (no false

@@ -12,8 +12,9 @@ from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
 from .queries import (all_queries, every_query, filtered_queries,
                       misordered_queries, skewed_queries)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
-                              FilterQuote, RuntimeFilterKind,
-                              build_filter_payload, probe_filter_mask)
+                              FilterCache, FilterQuote, RuntimeFilterKind,
+                              build_filter_payload, filter_cache_key,
+                              probe_filter_mask)
 from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
                          RelJoinStrategy, ReorderingStrategy,
                          SkewAwareStrategy, Strategy, default_strategies)
@@ -26,8 +27,9 @@ __all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
            "plan_runtime_filters", "prune_projections", "push_down_filters",
            "all_queries", "every_query", "filtered_queries",
            "misordered_queries", "skewed_queries", "DEFAULT_FILTER_KINDS",
-           "FILTER_KINDS", "FilterQuote", "RuntimeFilterKind",
-           "build_filter_payload", "probe_filter_mask", "AQEStrategy",
+           "FILTER_KINDS", "FilterCache", "FilterQuote", "RuntimeFilterKind",
+           "build_filter_payload", "filter_cache_key", "probe_filter_mask",
+           "AQEStrategy",
            "FilteredStrategy", "ForcedStrategy", "RelJoinStrategy",
            "ReorderingStrategy", "SkewAwareStrategy", "Strategy",
            "default_strategies"]

@@ -9,6 +9,7 @@ query suite reads like the original workload.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict
 
 import numpy as np
@@ -24,14 +25,27 @@ class Catalog:
     of the domain they draw from — the denominator of the runtime-filter
     planner's selectivity estimate sigma = surviving build keys / domain.
     It is header metadata (like the PK contract), not a measurement.
+
+    ``version`` identifies the catalog *contents*: every constructed
+    Catalog (each ``generate`` call included) gets a fresh monotonically
+    increasing value, and the cross-query ``FilterCache`` keys its
+    validity on it — payloads cached against one version are invalidated
+    when an executor runs against another. Data changes must therefore go
+    through a new Catalog object, never by mutating ``tables`` in place.
     """
 
     tables: Dict[str, Table]
     p: int
     key_domains: Dict[str, float] = dataclasses.field(default_factory=dict)
+    version: int = dataclasses.field(
+        default_factory=lambda: next(_CATALOG_VERSIONS))
 
     def table(self, name: str) -> Table:
         return self.tables[name]
+
+
+#: Source of ``Catalog.version`` values (process-unique, monotonic).
+_CATALOG_VERSIONS = itertools.count()
 
 
 #: (rows per unit scale, payload float columns) per table. Dimensions are

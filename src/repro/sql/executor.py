@@ -16,14 +16,14 @@ motivation for adaptivity).
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
 from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod)
+                               JoinMethod, filter_reduce_cost,
+                               runtime_filter_cost)
 from ..core.selection import JoinProperties, JoinType, Selection
 from ..core.stats import (StatsSource, TableStats, estimate_filter,
                           estimate_group_by, estimate_join)
@@ -40,7 +40,7 @@ from .planner import (JoinStep, catalog_base_stats, catalog_schema,
                       modeled_tree_cost, plan_runtime_filters,
                       prune_projections, push_down_filters)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, build_filter_payload,
-                              probe_filter_mask)
+                              filter_cache_key, probe_filter_mask)
 from .strategies import Strategy
 
 #: Shuffle-family methods: both sides cross the wire, so a probe-side
@@ -97,15 +97,38 @@ class FilterDecision:
     rows_before: int
     rows_after: int
     p: int                   # parallelism the filter was broadcast over
+    #: True when the payload came out of the cross-query FilterCache —
+    #: no build ran, so the distributed-build reduce bytes are zero.
+    cached: bool = False
+
+    @property
+    def broadcast_bytes(self) -> float:
+        """Wire bytes of shipping the serialized filter to the probe
+        side's p-1 remote tasks (Eq. 1 on m_bits/8 bytes) — paid per
+        query, cached or not. Delegates to ``runtime_filter_cost`` at
+        w=1 (raw bytes) so the measured accounting tracks the planner's
+        model, like ``reduce_bytes``."""
+        return runtime_filter_cost(self.plan.m_bits,
+                                   CostParams(p=self.p, w=1.0))
+
+    @property
+    def reduce_bytes(self) -> float:
+        """Wire bytes of the distributed *build* merge, charged at the
+        kind's actual reduce shape — ``filter_reduce_cost``'s per-kind
+        model at w=1 (raw bytes), so the measured accounting can never
+        drift from the planner's. Zero on a cache hit — nothing was
+        built."""
+        if self.cached:
+            return 0.0
+        return filter_reduce_cost(self.plan.m_bits,
+                                  CostParams(p=self.p, w=1.0),
+                                  kind=self.plan.kind)
 
     @property
     def network_bytes(self) -> float:
-        """Measured wire cost of the filter: merging the per-partition
-        partial payloads up the ceil(log2 p) reduce tree, then
-        broadcasting the serialized filter to the probe side's p-1 remote
-        tasks (Eq. 1 on m_bits/8 bytes)."""
-        rounds = math.ceil(math.log2(self.p)) if self.p > 1 else 0
-        return (self.p - 1 + rounds) * self.plan.m_bits / 8.0
+        """Total measured wire cost of the filter: build merge (if any)
+        plus the per-query broadcast."""
+        return self.reduce_bytes + self.broadcast_bytes
 
     @property
     def keep_measured(self) -> float:
@@ -140,6 +163,18 @@ class ExecutionResult:
         """Wire bytes spent broadcasting runtime filters (already included
         in ``network_bytes`` — honest accounting of the filters' price)."""
         return sum(f.network_bytes for f in self.filters)
+
+    @property
+    def filter_reduce_bytes(self) -> float:
+        """Wire bytes of the filters' distributed-build merges only (the
+        per-kind reduce tree / all_gather) — the component a cross-query
+        cache hit eliminates. Zero on a fully warm run."""
+        return sum(f.reduce_bytes for f in self.filters)
+
+    @property
+    def cached_filters(self) -> int:
+        """How many applied filters came out of the cross-query cache."""
+        return sum(1 for f in self.filters if f.cached)
 
     @property
     def probe_shuffle_bytes(self) -> float:
@@ -188,6 +223,9 @@ class Executor:
         # narrows this to e.g. ("bloom",) for PR-3-compatible behaviour).
         self.filter_kinds = getattr(strategy, "filter_kinds",
                                     DEFAULT_FILTER_KINDS)
+        # Cross-query filter cache (FilteredStrategy(cache=...)): consulted
+        # before every build, written after; None = cold path everywhere.
+        self.filter_cache = getattr(strategy, "filter_cache", None)
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
         # Key-domain denominators for the filter planner's sigma estimate.
@@ -199,6 +237,10 @@ class Executor:
     def execute(self, plan: Node) -> ExecutionResult:
         self._decisions: List[JoinDecision] = []
         self._filters: List[FilterDecision] = []
+        if self.filter_cache is not None:
+            # Bind the cache to this catalog: entries built against any
+            # other catalog version are invalidated before planning.
+            self.filter_cache.sync(self.catalog)
         if self.reorder:
             plan = prune_projections(push_down_filters(plan, self._schema),
                                      self._schema)
@@ -306,10 +348,12 @@ class Executor:
         plan = plan_runtime_filters([edge], [lstats, rstats], [1.0, sigma],
                                     self._params, self.filter_bits_per_key,
                                     leaves=[node.left, node.right],
-                                    kinds=self.filter_kinds)
+                                    kinds=self.filter_kinds,
+                                    cache=self.filter_cache)
         if not plan:
             return left, lstats
-        left = self._apply_runtime_filter(plan[0], left, right.table)
+        left = self._apply_runtime_filter(plan[0], left, right.table,
+                                          node.right, rstats)
         return left, self._boundary_stats(left, node.left)
 
     def _region_filters(self, graph, anns, stats, edges):
@@ -324,30 +368,59 @@ class Executor:
         plan = plan_runtime_filters(edges, stats, sigmas, self._params,
                                     self.filter_bits_per_key,
                                     leaves=graph.leaves,
-                                    kinds=self.filter_kinds)
+                                    kinds=self.filter_kinds,
+                                    cache=self.filter_cache)
+        masked = set()   # leaves already masked by an earlier filter
         for rf in plan:
+            # A build leaf that was itself a probe target earlier in this
+            # region no longer matches its static predicate chain — its
+            # payload is narrowed by *this query's* other filters and must
+            # not be stored under the chain-only cache key (a later query
+            # reusing it would drop rows that only this query excludes).
             anns[rf.probe] = self._apply_runtime_filter(
-                rf, anns[rf.probe], anns[rf.build].table)
+                rf, anns[rf.probe], anns[rf.build].table,
+                graph.leaves[rf.build], stats[rf.build],
+                cacheable=rf.build not in masked)
+            masked.add(rf.probe)
             stats[rf.probe] = self._boundary_stats(anns[rf.probe],
                                                    graph.leaves[rf.probe])
         return anns, stats
 
     def _apply_runtime_filter(self, rf: RuntimeFilter, probe: _Annotated,
-                              build: Table) -> _Annotated:
-        """Build the planned filter kind from the build side's surviving
-        keys and mask the probe table (no false negatives: only rows that
+                              build: Table, build_leaf: Node,
+                              build_stats: TableStats,
+                              cacheable: bool = True) -> _Annotated:
+        """Build (or fetch from the cross-query cache) the planned filter
+        kind and mask the probe table (no false negatives: only rows that
         cannot match are dropped). An empty build side yields the
         reject-everything payload for every kind (zero bloom array, empty
         zone interval, empty key list) — the join result is empty either
-        way."""
-        payload = build_filter_payload(rf, build)
+        way. Cache consults precede every build; fresh builds are stored
+        with the measured build-side stats so later queries (and the
+        planner's cache-aware quotes) can reuse them — unless the caller
+        marks the build ``cacheable=False`` because its table no longer
+        matches the leaf's static predicate chain (it was masked by
+        another runtime filter of this query); a cached *lookup* is still
+        safe there, since the chain-keyed payload is a superset (false
+        positives only, never false negatives)."""
+        payload = None
+        ck = None
+        if self.filter_cache is not None:
+            ck = filter_cache_key(build_leaf, rf.build_key, rf.kind,
+                                  rf.m_bits, rf.k)
+            payload = self.filter_cache.lookup(ck)
+        cached = payload is not None
+        if payload is None:
+            payload = build_filter_payload(rf, build)
+            if self.filter_cache is not None and cacheable:
+                self.filter_cache.store(ck, payload, build_stats)
         keep = probe_filter_mask(rf, payload,
                                  probe.table.column(rf.probe_key))
         table = probe.table.with_valid(probe.table.valid & keep)
         measured = table.measure()
         self._filters.append(FilterDecision(rf, probe.table.count(),
                                             int(measured.cardinality),
-                                            self.p))
+                                            self.p, cached=cached))
         return _Annotated(table, measured,
                           probe.estimated.scaled(rf.keep_est))
 

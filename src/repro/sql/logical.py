@@ -385,6 +385,10 @@ class RuntimeFilter:
     cost: float         # modeled workload of building + shipping the filter
     derived: bool = False
     kind: str = "bloom"
+    #: True when the planner found the payload in the cross-query
+    #: ``FilterCache`` and quoted the edge at ``cached_filter_cost``
+    #: (broadcast only — no build, no reduce tree).
+    cached: bool = False
 
 
 def augment_edges(graph: JoinGraph):

@@ -29,7 +29,7 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod, method_cost)
+                               JoinMethod, cached_filter_cost, method_cost)
 from ..core.selection import JoinProperties, JoinType, select_join_method
 from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
                           estimate_join, estimate_project)
@@ -38,7 +38,8 @@ from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
                       RuntimeFilter, Scan, Schema, augment_edges,
                       extract_join_graph, filter_chain, key_band_fraction,
                       leaf_columns, leaf_retain_fraction)
-from .runtime_filters import DEFAULT_FILTER_KINDS, FILTER_KINDS
+from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
+                              FilterCache, filter_cache_key)
 
 #: Static guess for an aggregate's group count as a fraction of input rows
 #: (used only when no runtime statistic exists yet; exchange boundaries
@@ -289,7 +290,8 @@ def plan_runtime_filters(edges, leaf_stats: List[TableStats],
                          sigmas: List[float], params: CostParams,
                          bits_per_key: int = BLOOM_DEFAULT_BITS_PER_KEY,
                          leaves: Optional[List[Node]] = None,
-                         kinds=DEFAULT_FILTER_KINDS
+                         kinds=DEFAULT_FILTER_KINDS,
+                         cache: Optional[FilterCache] = None
                          ) -> List[RuntimeFilter]:
     """Decide runtime-filter placement + kind per join-graph edge.
 
@@ -309,6 +311,13 @@ def plan_runtime_filters(edges, leaf_stats: List[TableStats],
     derived through key equivalence classes participate too: that is what
     pushes a dimension's filter below exchanges of relations it never
     directly joins.
+
+    With a ``cache`` (cross-query ``FilterCache``), a kind whose payload
+    is already cached for the edge's build leaf is quoted at
+    ``cached_filter_cost`` instead — broadcast only, the build + reduce
+    terms drop — so warm filters clear the gate on edges a cold build
+    would not. An empty or absent cache changes no quote: cold-cache
+    decisions are byte-identical to the uncached planner's.
     """
     out: List[RuntimeFilter] = []
     seen = set()
@@ -324,25 +333,32 @@ def plan_runtime_filters(edges, leaf_stats: List[TableStats],
         band = (key_band_fraction(leaves[e.build], e.build_key)
                 if leaves is not None else None)
         _, unfiltered = _step(a, b, params)
-        best = None          # (total, quote, filtered_cost)
+        best = None          # (total, quote, filtered_cost, cached, cost)
         for kname in kinds:
             quote = FILTER_KINDS[kname].quote(n, sigmas[e.build], band,
                                               bits_per_key, params)
             if quote is None or quote.keep_est >= 1.0:
                 continue
+            cached = (cache is not None and leaves is not None
+                      and cache.contains(filter_cache_key(
+                          leaves[e.build], e.build_key, quote.kind,
+                          quote.bits, quote.k)))
+            cost = (cached_filter_cost(quote.bits, params) if cached
+                    else quote.cost)
             _, filtered = _step(a.scaled(quote.keep_est), b, params)
-            total = filtered + quote.cost
+            total = filtered + cost
             if best is None or total < best[0]:
-                best = (total, quote, filtered)
+                best = (total, quote, filtered, cached, cost)
         if best is None:
             continue
-        total, quote, filtered = best
+        total, quote, filtered, cached, cost = best
         if total < unfiltered * (1 - 1e-9):
             out.append(RuntimeFilter(e.probe, e.build, e.probe_key,
                                      e.build_key, quote.bits, quote.k,
                                      sigmas[e.build], quote.keep_est,
-                                     unfiltered - filtered, quote.cost,
-                                     derived=e.derived, kind=quote.kind))
+                                     unfiltered - filtered, cost,
+                                     derived=e.derived, kind=quote.kind,
+                                     cached=cached))
     return out
 
 

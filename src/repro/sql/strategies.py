@@ -9,7 +9,7 @@ from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
 from ..core.selection import (JoinProperties, Selection, select_absolute_size,
                               select_forced, select_join_method)
 from ..core.stats import DEFAULT_WATERMARK_BYTES, TableStats
-from .runtime_filters import DEFAULT_FILTER_KINDS
+from .runtime_filters import DEFAULT_FILTER_KINDS, FilterCache
 
 
 class Strategy:
@@ -139,6 +139,7 @@ class ReorderingStrategy(Strategy):
                                     BLOOM_DEFAULT_BITS_PER_KEY)
         self.filter_kinds = getattr(self.inner, "filter_kinds",
                                     DEFAULT_FILTER_KINDS)
+        self.filter_cache = getattr(self.inner, "filter_cache", None)
         if self.w is None:
             self.w = getattr(self.inner, "w", 1.0)
 
@@ -172,11 +173,18 @@ class FilteredStrategy(Strategy):
     #: Reducer kinds the planner may quote, in tie-break order.
     #: ``("bloom",)`` restricts the framework to bloom-only quoting.
     kinds: tuple = DEFAULT_FILTER_KINDS
+    #: Cross-query ``FilterCache`` shared across Executor instances: built
+    #: payloads are reused on later queries against the same catalog, and
+    #: cache-hit edges are quoted without the build + reduce terms. None
+    #: (default) keeps every run cold — byte-identical to the uncached
+    #: planner.
+    cache: FilterCache | None = None
 
     def __post_init__(self):
         self.name = f"Filtered({self.inner.name})"
         self.runtime_filters = True
         self.filter_kinds = tuple(self.kinds)
+        self.filter_cache = self.cache
         # Forward the wrapped strategy's executor-facing flags so
         # Filtered(Reorder(...)) / Filtered(SkewAware(...)) compose.
         self.reorder = getattr(self.inner, "reorder", False)

@@ -20,12 +20,14 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core.cost_model import (CostParams, ZONE_MAP_BITS,
-                                   semi_join_cost, zone_map_cost)
+                                   cached_filter_cost, semi_join_cost,
+                                   zone_map_cost)
 from repro.core.psts import distinct_count, key_set, semi_join_mask
 from repro.joins.ref import rows_as_set, rows_close
 from repro.kernels.zone_map import key_range, key_range_ref, range_probe
-from repro.sql import (Executor, FilteredStrategy, RelJoinStrategy,
-                       filtered_queries, plan_runtime_filters)
+from repro.sql import (Executor, FilterCache, FilteredStrategy,
+                       RelJoinStrategy, filter_cache_key, filtered_queries,
+                       generate, plan_runtime_filters)
 from repro.sql.datagen import Catalog
 from repro.sql.logical import (Aggregate, Filter, Join, JoinEdge, Project,
                                Scan, key_band_fraction, key_retain_fraction)
@@ -252,6 +254,149 @@ def test_bloom_only_configuration_still_filters(catalog):
     filt = Executor(catalog,
                     FilteredStrategy(kinds=("bloom",))).execute(plan)
     assert [f.plan.kind for f in filt.filters] == ["bloom"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-query filter cache: key normalization + hit/miss/invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_filter_cache_key_normalizes_predicate_order():
+    """Conjunctive filters commute, so stacking order must not split the
+    cache: F1(F2(scan)) and F2(F1(scan)) share an entry. Projections are
+    transparent (they never change the key column's values)."""
+    f1 = dict(column="d_month", op="eq", value=6.0, selectivity=1 / 12)
+    f2 = dict(column="d_date_sk", op="lt", value=90.0, selectivity=0.25)
+    a = Filter(Filter(Scan("date_dim"), **f1), **f2)
+    b = Filter(Filter(Scan("date_dim"), **f2), **f1)
+    ka = filter_cache_key(a, "d_date_sk", "bloom", 1024, 7)
+    kb = filter_cache_key(b, "d_date_sk", "bloom", 1024, 7)
+    assert ka is not None and ka == kb
+    proj = Project(a, ("d_date_sk",))
+    assert filter_cache_key(proj, "d_date_sk", "bloom", 1024, 7) == ka
+    # Different kind / size params are different payloads.
+    assert filter_cache_key(a, "d_date_sk", "zone_map", 64, 0) != ka
+    assert filter_cache_key(a, "d_date_sk", "bloom", 2048, 7) != ka
+
+
+def test_filter_cache_key_rejects_non_scan_leaves():
+    """Aggregated subqueries' key sets depend on subtree execution — the
+    normalization does not capture that, so they are uncacheable."""
+    agg = Aggregate(Scan("catalog_sales"), "cs_item_sk",
+                    (("cs_sales_price", "sum"),))
+    assert filter_cache_key(agg, "cs_item_sk", "bloom", 1024, 7) is None
+
+
+def test_planner_quotes_cache_hits_without_build_terms():
+    """A cached kind is quoted at cached_filter_cost (broadcast only);
+    with an empty cache the quote — and the planned filter — is
+    byte-identical to the uncached planner's."""
+    probe, build = _stats(1 << 20, 32_768), _stats(2_048, 128)
+    leaves = [Scan("fact"),
+              Filter(Scan("dim"), "pk", "lt", 128, selectivity=0.25)]
+    cold = plan_runtime_filters(_EDGE, [probe, build], [1.0, 0.25],
+                                _PARAMS, leaves=leaves, cache=FilterCache())
+    bare = plan_runtime_filters(_EDGE, [probe, build], [1.0, 0.25],
+                                _PARAMS, leaves=leaves)
+    assert cold == bare and not cold[0].cached
+    cache = FilterCache()
+    rf = cold[0]
+    cache.store(filter_cache_key(leaves[1], rf.build_key, rf.kind,
+                                 rf.m_bits, rf.k),
+                payload="sentinel", build_stats=build)
+    warm = plan_runtime_filters(_EDGE, [probe, build], [1.0, 0.25],
+                                _PARAMS, leaves=leaves, cache=cache)
+    assert warm[0].cached
+    assert warm[0].cost == pytest.approx(
+        cached_filter_cost(rf.m_bits, _PARAMS))
+    assert warm[0].cost < rf.cost
+
+
+def test_executor_cache_hit_miss_and_zero_rebuild(catalog):
+    """End to end: the first run misses and populates, the repeat run
+    reuses every payload (zero reduce bytes) with identical results."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    cache = FilterCache()
+    strat = FilteredStrategy(cache=cache)
+    cold = Executor(catalog, strat).execute(plan)
+    assert cold.filters and cold.cached_filters == 0
+    assert cache.misses == len(cold.filters) and cache.hits == 0
+    assert cold.filter_reduce_bytes > 0
+    warm = Executor(catalog, strat).execute(plan)
+    assert warm.cached_filters == len(warm.filters) == len(cold.filters)
+    assert warm.filter_reduce_bytes == 0.0
+    assert cache.hits == len(warm.filters)
+    assert rows_close(_rows(warm), _rows(cold))
+    # Every stored payload carries the measured build-side stats.
+    stored = [cache.build_stats(k) for k in cache._entries]
+    assert stored and all(s is not None and s.cardinality > 0
+                          for s in stored)
+    assert cache.build_stats(None) is None  # uncacheable key -> no stats
+
+
+def test_filter_cache_invalidates_on_catalog_change(catalog):
+    """Payloads built against one catalog version must never filter
+    another: regenerated data invalidates every entry."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    cache = FilterCache()
+    strat = FilteredStrategy(cache=cache)
+    Executor(catalog, strat).execute(plan)
+    assert len(cache) > 0
+    other = generate(scale=0.1, p=4, seed=43)
+    res = Executor(other, strat).execute(plan)
+    assert cache.invalidations == 1
+    assert res.cached_filters == 0          # nothing stale was reused
+    # Back on the original catalog: the entries built against it are gone
+    # too (validity is a binding, not a per-catalog pool).
+    res2 = Executor(catalog, strat).execute(plan)
+    assert res2.cached_filters == 0 and cache.invalidations == 2
+
+
+def test_masked_build_side_is_not_cached(catalog):
+    """A payload built from a build table that was itself masked by
+    another runtime filter of the same query must NOT be stored under
+    the chain-only cache key: a later query reusing it would drop rows
+    that only the first query's extra join excludes (false negatives).
+
+    Snowflake shape: household's zone map masks customer first, then the
+    fact<-customer bloom is built from the *masked* customer — that
+    second payload is the poisoned one."""
+    cust = Filter(Scan("customer"), "c_region", "eq", 3, selectivity=0.125)
+    hh = Filter(Scan("household"), "hd_demo_sk", "lt", 300,
+                selectivity=0.1)
+    snowflake = Join(Scan("store_sales"),
+                     Join(cust, hh, "c_hdemo_sk", "hd_demo_sk"),
+                     "ss_customer_sk", "c_customer_sk")
+    two_way = Join(Scan("store_sales"), cust,
+                   "ss_customer_sk", "c_customer_sk")
+    cache = FilterCache()
+    strat = FilteredStrategy(cache=cache)
+    res1 = Executor(catalog, strat).execute(snowflake)
+    # The scenario is real: both filters planned, customer masked before
+    # the fact<-customer payload is built from it.
+    assert len(res1.filters) == 2
+    assert [f.plan.build_key for f in res1.filters] == ["hd_demo_sk",
+                                                        "c_customer_sk"]
+    # Only household's (clean) payload may be stored.
+    assert len(cache) == 1
+    # The two-way query must rebuild customer's filter from its true
+    # static chain and produce exactly the uncached result.
+    base = Executor(catalog, RelJoinStrategy()).execute(two_way)
+    res2 = Executor(catalog, strat).execute(two_way)
+    assert res2.filters and all(not f.cached for f in res2.filters)
+    assert rows_close(_rows(res2), _rows(base))
+
+
+def test_cold_cache_selections_identical_to_uncached(catalog):
+    """The cold-cache byte-identity claim, end to end on q19-q23: an
+    empty cache changes no quote, no kind, no method selection."""
+    for qname, plan in filtered_queries().items():
+        bare = Executor(catalog, FilteredStrategy()).execute(plan)
+        cold = Executor(catalog, FilteredStrategy(cache=FilterCache())
+                        ).execute(plan)
+        assert [f.plan for f in cold.filters] == [f.plan for f in
+                                                  bare.filters], qname
+        assert cold.methods() == bare.methods(), qname
 
 
 # ---------------------------------------------------------------------------
