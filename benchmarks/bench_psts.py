@@ -7,7 +7,7 @@ variant, immune to 1-core CI noise)."""
 
 from __future__ import annotations
 
-from repro.core import JoinMethod, compute_psts
+from repro.core import compute_psts
 from repro.sql import default_strategies, generate
 
 from .common import emit, run_suite

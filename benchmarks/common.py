@@ -8,10 +8,9 @@ mirroring the paper's 3-run averaging.
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-from repro.sql import Executor, all_queries, generate
+from repro.sql import Executor, all_queries
 from repro.sql.strategies import Strategy
 
 

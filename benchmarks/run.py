@@ -17,6 +17,12 @@ is not in it does not exist as far as run.py and CI are concerned.
 benchmark — the emitted rows plus profile metadata and wall time — which
 the CI smoke job uploads as the ``bench-smoke-json`` artifact, seeding the
 cross-PR benchmark trajectory.
+
+``--compare OLD NEW`` diffs two such artifacts (files or directories of
+``<bench>.json`` files) instead of running anything: every tracked metric
+— per-benchmark wall seconds and every timed row's ``us_per_call`` — is
+compared, and any regression beyond ``--threshold`` (default 10%) exits
+non-zero with the offenders listed.
 """
 
 from __future__ import annotations
@@ -71,6 +77,56 @@ def _registry():
     }
 
 
+def _load_artifacts(path: pathlib.Path) -> dict:
+    """Load one bench-JSON artifact file, or every ``*.json`` in a
+    directory, keyed by benchmark name."""
+    if path.is_dir():
+        files = sorted(path.glob("*.json"))
+    else:
+        files = [path]
+    out = {}
+    for f in files:
+        payload = json.loads(f.read_text())
+        out[payload["bench"]] = payload
+    return out
+
+
+def _tracked_metrics(artifacts: dict) -> dict:
+    """Flatten artifacts into ``metric-name -> value`` for comparison:
+    per-benchmark wall seconds plus every timed row (``us_per_call`` > 0;
+    zero marks derived-metric rows, which carry no timing to regress)."""
+    metrics = {}
+    for bench, payload in artifacts.items():
+        metrics[f"{bench}:seconds"] = float(payload["seconds"])
+        for row in payload.get("rows", []):
+            us = float(row.get("us_per_call", 0.0))
+            if us > 0:
+                metrics[f"{bench}/{row['name']}:us_per_call"] = us
+    return metrics
+
+
+def compare_artifacts(old_path: str, new_path: str,
+                      threshold: float = 0.10) -> list:
+    """Regressions of ``new`` vs ``old``: tracked metrics that grew by
+    more than ``threshold`` (fraction), plus tracked metrics that vanished
+    (a silently dropped benchmark is a regression, not a win). Returns a
+    list of human-readable offense lines, empty when clean."""
+    old = _tracked_metrics(_load_artifacts(pathlib.Path(old_path)))
+    new = _tracked_metrics(_load_artifacts(pathlib.Path(new_path)))
+    offenses = []
+    for name, old_val in sorted(old.items()):
+        if name not in new:
+            offenses.append(f"{name}: missing from new artifact "
+                            f"(was {old_val:g})")
+            continue
+        new_val = new[name]
+        if old_val > 0 and new_val > old_val * (1 + threshold):
+            pct = 100.0 * (new_val / old_val - 1)
+            offenses.append(f"{name}: {old_val:g} -> {new_val:g} "
+                            f"(+{pct:.1f}% > {100 * threshold:.0f}%)")
+    return offenses
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -82,7 +138,23 @@ def main(argv=None) -> None:
                     help="comma-separated subset of registered names")
     ap.add_argument("--json-out", default="",
                     help="directory for per-benchmark JSON result files")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two bench-JSON artifacts (files or "
+                         "directories) instead of running; exit non-zero "
+                         "on any regression beyond --threshold")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="--compare regression threshold as a fraction "
+                         "(default 0.10 = 10%%)")
     args = ap.parse_args(argv)
+    if args.compare:
+        offenses = compare_artifacts(args.compare[0], args.compare[1],
+                                     args.threshold)
+        for line in offenses:
+            print(f"REGRESSION {line}")
+        if offenses:
+            sys.exit(1)
+        print(f"no regressions beyond {100 * args.threshold:.0f}%")
+        return
     json_dir = pathlib.Path(args.json_out) if args.json_out else None
     if json_dir is not None:
         json_dir.mkdir(parents=True, exist_ok=True)

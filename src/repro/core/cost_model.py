@@ -173,31 +173,45 @@ def broadcast_hash_cost(size_a: float, size_b: float, params: CostParams) -> flo
 
 
 def shuffle_hash_cost(size_a: float, size_b: float, params: CostParams,
-                      skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+                      skew_a: float = 1.0, skew_b: float = 1.0,
+                      pre_a: bool = False, pre_b: bool = False) -> float:
     """Eq. 10: C_shuffleHash = ((wp-w+p)/p)|A| + ((wp-w+2p)/p)|B|.
 
     Under key skew every shuffle-phase term (exchange, build, probe) is
     bounded by the straggler partition, so each side's coefficient scales
     with its skew factor: |A| -> skew_a|A|, |B| -> skew_b|B|. Defaults
     reproduce the paper's uniform-distribution formula.
+
+    ``pre_a`` / ``pre_b`` mark a side as already hash-partitioned on the
+    join key (e.g. the output of an upstream shuffle join or group-by on
+    the same key). The engine elides that side's exchange (ships 0 bytes),
+    so the quote drops the w(p-1)/p network term for the side — its
+    coefficient (wp-w+p)/p collapses to the probe read 1 (A side) and
+    (wp-w+2p)/p to build + probe 2 (B side). Paper §3.7's C_shuffle = 0
+    case, which the selection would otherwise re-pay.
     """
     p, w = params.p, params.w
-    return ((w * p - w + p) / p * skew_a * size_a
-            + (w * p - w + 2 * p) / p * skew_b * size_b)
+    coef_a = 1.0 if pre_a else (w * p - w + p) / p
+    coef_b = 2.0 if pre_b else (w * p - w + 2 * p) / p
+    return coef_a * skew_a * size_a + coef_b * skew_b * size_b
 
 
 def shuffle_sort_cost(size_a: float, size_b: float, card_a: float, card_b: float,
                       params: CostParams,
-                      skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+                      skew_a: float = 1.0, skew_b: float = 1.0,
+                      pre_a: bool = False, pre_b: bool = False) -> float:
     """Eq. 8: ((wp-w+p)/p + log2(a/p))|A| + ((wp-w+p)/p + log2(b/p))|B|.
 
     Skew-adjusted like :func:`shuffle_hash_cost`; the sort-depth log terms
     additionally grow with the straggler partition's cardinality.
+    ``pre_a`` / ``pre_b`` drop the elided exchange's w(p-1)/p network term
+    for a side already partitioned on the join key (see
+    :func:`shuffle_hash_cost`); the sort + merge terms remain.
     """
     p, w = params.p, params.w
     base = (w * p - w + p) / p
-    ta = base + math.log2(max(skew_a * card_a / p, 1.0))
-    tb = base + math.log2(max(skew_b * card_b / p, 1.0))
+    ta = (1.0 if pre_a else base) + math.log2(max(skew_a * card_a / p, 1.0))
+    tb = (1.0 if pre_b else base) + math.log2(max(skew_b * card_b / p, 1.0))
     return ta * skew_a * size_a + tb * skew_b * size_b
 
 
@@ -252,19 +266,24 @@ def cartesian_cost(size_a: float, size_b: float, card_a: float,
 
 def method_cost(method: JoinMethod, size_a: float, size_b: float,
                 card_a: float, card_b: float, params: CostParams,
-                skew_a: float = 1.0, skew_b: float = 1.0) -> float:
+                skew_a: float = 1.0, skew_b: float = 1.0,
+                pre_a: bool = False, pre_b: bool = False) -> float:
     """Dispatch to the per-method overall cost. Broadcast-family methods are
     skew-invariant (B is fully replicated regardless of key distribution and
-    A never moves); shuffle-family methods are charged at the straggler."""
+    A never moves); shuffle-family methods are charged at the straggler.
+    ``pre_a``/``pre_b`` mark pre-partitioned sides whose shuffle is elided —
+    they only discount the plain shuffle methods (salting re-keys the data,
+    so a salted exchange can never be elided)."""
     if method is JoinMethod.BROADCAST_HASH:
         return broadcast_hash_cost(size_a, size_b, params)
     if method is JoinMethod.SHUFFLE_HASH:
-        return shuffle_hash_cost(size_a, size_b, params, skew_a, skew_b)
+        return shuffle_hash_cost(size_a, size_b, params, skew_a, skew_b,
+                                 pre_a, pre_b)
     if method is JoinMethod.SALTED_SHUFFLE_HASH:
         return salted_shuffle_hash_cost(size_a, size_b, params, skew_a)
     if method is JoinMethod.SHUFFLE_SORT:
         return shuffle_sort_cost(size_a, size_b, card_a, card_b, params,
-                                 skew_a, skew_b)
+                                 skew_a, skew_b, pre_a, pre_b)
     if method is JoinMethod.BROADCAST_NL:
         return broadcast_nl_cost(size_a, size_b, card_a, params)
     if method is JoinMethod.CARTESIAN:
@@ -276,11 +295,12 @@ def method_cost(method: JoinMethod, size_a: float, size_b: float,
 
 def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
               params: CostParams,
-              skew_a: float = 1.0, skew_b: float = 1.0
+              skew_a: float = 1.0, skew_b: float = 1.0,
+              pre_a: bool = False, pre_b: bool = False
               ) -> Dict[JoinMethod, float]:
     """Costs of every modeled method for one logical join."""
     return {m: method_cost(m, size_a, size_b, card_a, card_b, params,
-                           skew_a, skew_b)
+                           skew_a, skew_b, pre_a, pre_b)
             for m in JoinMethod}
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Optional, Tuple
 
 from .cost_model import (CostParams, JoinMethod, broadcast_hash_cost,
                          broadcast_nl_cost, cartesian_cost,
@@ -43,6 +43,11 @@ class JoinProperties:
     sortable_keys: bool = True         # sort join feasible
     hashable: bool = True              # memory allows building a hash map
     hint: Optional[JoinMethod] = None  # user-defined join hint (§4.3 line 1)
+    #: Side already hash-partitioned on its join key (upstream shuffle join
+    #: or group-by on the same key). The engine elides that side's exchange,
+    #: so shuffle-family quotes drop its network term (paper §3.7).
+    left_partitioned: bool = False
+    right_partitioned: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +63,8 @@ class Selection:
     salt_r: int = 1              # salt buckets when SALTED_SHUFFLE_HASH
 
 
-def _ordered(left: TableStats, right: TableStats):
+def _ordered(left: TableStats, right: TableStats,
+             ) -> Tuple[TableStats, TableStats, bool]:
     """Paper §3.1.4: A is the larger side. Returns (A, B, swapped)."""
     if right.size_bytes > left.size_bytes:
         return right, left, True
@@ -96,14 +102,20 @@ def select_join_method(left: TableStats, right: TableStats,
     # paper's costs bit-for-bit.
     ka, kb = max(a.skew, 1.0), max(b.skew, 1.0)
     salt_r = default_salt_factor(ka, params)
+    # Map the plan-order pre-partitioned flags onto the model's A/B roles.
+    # Only the plain shuffle methods see them: a salted exchange re-keys the
+    # data, so salting always re-pays the shuffle it would otherwise elide.
+    pre_a = props.right_partitioned if swapped else props.left_partitioned
+    pre_b = props.left_partitioned if swapped else props.right_partitioned
 
     costs = {
         JoinMethod.BROADCAST_HASH: broadcast_hash_cost(sa, sb, params),
-        JoinMethod.SHUFFLE_HASH: shuffle_hash_cost(sa, sb, params, ka, kb),
+        JoinMethod.SHUFFLE_HASH: shuffle_hash_cost(sa, sb, params, ka, kb,
+                                                   pre_a, pre_b),
         JoinMethod.SALTED_SHUFFLE_HASH: salted_shuffle_hash_cost(
             sa, sb, params, ka, salt_r),
         JoinMethod.SHUFFLE_SORT: shuffle_sort_cost(sa, sb, ca, cb, params,
-                                                   ka, kb),
+                                                   ka, kb, pre_a, pre_b),
         JoinMethod.BROADCAST_NL: broadcast_nl_cost(sa, sb, ca, params),
         JoinMethod.CARTESIAN: cartesian_cost(sa, sb, ca, params),
     }

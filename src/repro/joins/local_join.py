@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from ..kernels import ops as kops
 from ..kernels import ref as kref
-from .slots import BUCKET_SEED, gather_rows, hash32, slot_scatter
+from .slots import BUCKET_SEED, hash32, slot_scatter
 
 A_SENTINEL = -1
 B_SENTINEL = -2

@@ -14,7 +14,7 @@ the engine puts the larger table on the probe side as §3.1.4 prescribes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

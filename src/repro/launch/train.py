@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from ..configs import ARCH_ALIASES, get_config, get_smoke_config
 from ..core.relshard import plan_model
 from ..models.config import ShapeConfig

@@ -18,7 +18,6 @@ runtime statistics for re-planning capacity.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax

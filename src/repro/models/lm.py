@@ -11,7 +11,6 @@ dry-run host). Sharding is expressed as a congruent tree of PartitionSpecs
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

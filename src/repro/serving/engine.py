@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.relshard import ShardingPlan, plan_model, replan
+from ..core.relshard import ShardingPlan, replan
 from ..models import lm
 from ..models.config import ModelConfig, ShapeConfig
 

@@ -4,8 +4,12 @@ reordering), and the adaptive stage-wise executor."""
 
 from .datagen import Catalog, generate
 from .executor import ExecutionResult, Executor, FilterDecision, JoinDecision
-from .logical import (Aggregate, Filter, Join, JoinEdge, JoinGraph, Node,
-                      Project, RuntimeFilter, Scan, extract_join_graph)
+from .logical import (Aggregate, Distribution, Filter, Join, JoinEdge,
+                      JoinGraph, Node, Project, RuntimeFilter, Scan,
+                      extract_join_graph, infer_distribution, walk_paths)
+from .plan_analysis import (RULES, PlanVerificationError, Rule, Violation,
+                            analyze_plan, audit_join_decision,
+                            verify_execution)
 from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
                       optimize, plan_runtime_filters, prune_projections,
                       push_down_filters)
@@ -20,9 +24,13 @@ from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
                          SkewAwareStrategy, Strategy, default_strategies)
 
 __all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
-           "FilterDecision", "JoinDecision", "Aggregate", "Filter", "Join",
+           "FilterDecision", "JoinDecision", "Aggregate", "Distribution",
+           "Filter", "Join",
            "JoinEdge", "JoinGraph", "Node", "Project", "RuntimeFilter",
-           "Scan", "extract_join_graph", "OptimizedPlan",
+           "Scan", "extract_join_graph", "infer_distribution", "walk_paths",
+           "RULES", "PlanVerificationError", "Rule", "Violation",
+           "analyze_plan", "audit_join_decision", "verify_execution",
+           "OptimizedPlan",
            "enumerate_join_order", "modeled_tree_cost", "optimize",
            "plan_runtime_filters", "prune_projections", "push_down_filters",
            "all_queries", "every_query", "filtered_queries",

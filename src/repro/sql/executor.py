@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax.numpy as jnp
 
@@ -35,12 +35,19 @@ from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
                       RuntimeFilter, Scan, augment_edges, extract_join_graph,
                       key_retain_fraction, leaf_retain_fraction)
+from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
+                            audit_exchanges, audit_filter_decision,
+                            audit_selection, catalog_dtypes, check_cache_reuse,
+                            check_cache_store, check_filter_placement,
+                            check_filter_quote, check_replan_step,
+                            check_schema_preserved)
 from .planner import (JoinStep, catalog_base_stats, catalog_schema,
                       enumerate_join_order, leaf_key_domain,
                       modeled_tree_cost, plan_runtime_filters,
                       prune_projections, push_down_filters)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, build_filter_payload,
-                              filter_cache_key, probe_filter_mask)
+                              filter_cache_key, predicate_chain,
+                              probe_filter_mask)
 from .strategies import Strategy
 
 #: Shuffle-family methods: both sides cross the wire, so a probe-side
@@ -48,11 +55,16 @@ from .strategies import Strategy
 _SHUFFLE_FAMILY = (JoinMethod.SHUFFLE_HASH, JoinMethod.SHUFFLE_SORT,
                    JoinMethod.SALTED_SHUFFLE_HASH)
 
-#: Join types whose result survives dropping non-matching probe rows: no
-#: runtime-filter kind ever drops a matching row (no false negatives), so
-#: these are exactly the types for which a probe-side filter is
-#: semantics-free.
-_FILTERABLE_TYPES = (JoinType.INNER, JoinType.LEFT_SEMI)
+#: Join types for which a probe-side runtime filter is semantics-free.
+#: INNER/LEFT_SEMI: dropped probe rows cannot appear in the result (no
+#: filter kind has false negatives). LEFT_OUTER: dropped probe rows DO
+#: appear (null-padded), so the executor captures them before the join
+#: and re-injects them afterwards with zero-padded build columns and
+#: ``_matched=False`` — exactly what the join itself would have produced
+#: for them (the padding path; plan-analysis rule F1). LEFT_ANTI stays
+#: unfilterable: the filter would drop exactly the rows the query keeps.
+_FILTERABLE_TYPES = (JoinType.INNER, JoinType.LEFT_SEMI,
+                     JoinType.LEFT_OUTER)
 
 
 @dataclasses.dataclass
@@ -63,6 +75,9 @@ class JoinDecision:
     left_stats: TableStats
     right_stats: TableStats
     report: JoinReport
+    #: The properties (incl. partition flags) the selection ran under —
+    #: what the plan analyzer's exchange audit (E1/E2) checks against.
+    props: Optional[JoinProperties] = None
 
     @property
     def network_bytes(self) -> float:
@@ -194,7 +209,8 @@ class Executor:
     def __init__(self, catalog: Catalog, strategy: Strategy,
                  adaptive: bool = True, est_error: float = 1.0,
                  use_kernel: bool = False, capacity_factor: float = 2.0,
-                 compact: bool = True, reorder: Optional[bool] = None):
+                 compact: bool = True, reorder: Optional[bool] = None,
+                 verify: Optional[bool] = None):
         self.catalog = catalog
         self.strategy = strategy
         self.adaptive = adaptive
@@ -226,6 +242,11 @@ class Executor:
         # Cross-query filter cache (FilteredStrategy(cache=...)): consulted
         # before every build, written after; None = cold path everywhere.
         self.filter_cache = getattr(strategy, "filter_cache", None)
+        # Debug-mode plan verification: every plan (incl. adaptive re-plans
+        # and filter placements) runs through the static analyzer's rules
+        # before/while executing; violations raise PlanVerificationError.
+        self.verify = (getattr(strategy, "verify", False)
+                       if verify is None else verify)
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
         # Key-domain denominators for the filter planner's sigma estimate.
@@ -241,9 +262,18 @@ class Executor:
             # Bind the cache to this catalog: entries built against any
             # other catalog version are invalidated before planning.
             self.filter_cache.sync(self.catalog)
+        if self.verify:
+            self._gate(analyze_plan(plan, self._schema,
+                                    catalog_dtypes(self.catalog)))
         if self.reorder:
-            plan = prune_projections(push_down_filters(plan, self._schema),
-                                     self._schema)
+            rewritten = prune_projections(
+                push_down_filters(plan, self._schema), self._schema)
+            if self.verify:
+                self._gate(check_schema_preserved(plan, rewritten,
+                                                  self._schema))
+                self._gate(analyze_plan(rewritten, self._schema,
+                                        catalog_dtypes(self.catalog)))
+            plan = rewritten
         t0 = time.perf_counter()
         ann = self._eval(plan)
         ann.table.valid.block_until_ready()
@@ -255,6 +285,10 @@ class Executor:
         return ExecutionResult(ann.table, self._decisions, dt, net, loc,
                                ann.table.count(), straggler_bytes=strag,
                                filters=self._filters)
+
+    def _gate(self, violations: List[Violation]) -> None:
+        if violations:
+            raise PlanVerificationError(violations)
 
     # -- evaluation ------------------------------------------------------------
 
@@ -300,12 +334,24 @@ class Executor:
             # statistics). Non-adaptive mode keeps static estimates.
             lstats = self._boundary_stats(left, node.left)
             rstats = self._boundary_stats(right, node.right)
+            spill = None
             if (self.runtime_filters and node.hint is None
                     and node.join_type in _FILTERABLE_TYPES):
+                before = left
                 left, lstats = self._filter_pair(left, lstats, right, rstats,
                                                  node)
-            return self._join(left, right, lstats, rstats, node.left_key,
-                              node.right_key, node.join_type, node.hint)
+                if (node.join_type is JoinType.LEFT_OUTER
+                        and left is not before):
+                    # Padding path: the rows the filter dropped are exactly
+                    # the probe rows with no build match — capture them so
+                    # they can re-enter the result null-padded.
+                    spill = before.table.with_valid(before.table.valid
+                                                    & ~left.table.valid)
+            out = self._join(left, right, lstats, rstats, node.left_key,
+                             node.right_key, node.join_type, node.hint)
+            if spill is not None:
+                out = self._pad_outer_rows(out, spill)
+            return out
 
         if isinstance(node, Aggregate):
             child = self._eval(node.child)
@@ -352,6 +398,13 @@ class Executor:
                                     cache=self.filter_cache)
         if not plan:
             return left, lstats
+        if self.verify:
+            # The executor compensates LEFT_OUTER placements via the
+            # padding path in _eval — that's what licenses F1 here.
+            padded = node.join_type is JoinType.LEFT_OUTER
+            self._gate(check_filter_placement(plan[0], node.join_type,
+                                              padded=padded)
+                       + check_filter_quote(plan[0]))
         left = self._apply_runtime_filter(plan[0], left, right.table,
                                           node.right, rstats)
         return left, self._boundary_stats(left, node.left)
@@ -372,6 +425,12 @@ class Executor:
                                     cache=self.filter_cache)
         masked = set()   # leaves already masked by an earlier filter
         for rf in plan:
+            if self.verify:
+                # Region edges are INNER by construction (extract_join_graph
+                # only walks inner joins), so placement is always safe —
+                # the gate still runs to catch a future loosening.
+                self._gate(check_filter_placement(rf, JoinType.INNER)
+                           + check_filter_quote(rf))
             # A build leaf that was itself a probe target earlier in this
             # region no longer matches its static predicate chain — its
             # payload is narrowed by *this query's* other filters and must
@@ -410,17 +469,33 @@ class Executor:
                                   rf.m_bits, rf.k)
             payload = self.filter_cache.lookup(ck)
         cached = payload is not None
+        if cached and self.verify and ck is not None:
+            # F3 reuse side: the cache keys payloads by (chain, key, kind,
+            # shape), so a hit's stored chain must be subset-safe for this
+            # edge's chain. Exact-key hits make this trivially true today;
+            # the gate pins it against a future key loosening.
+            self._gate(check_cache_reuse((ck[0], ck[1]),
+                                         predicate_chain(build_leaf)))
         if payload is None:
             payload = build_filter_payload(rf, build)
             if self.filter_cache is not None and cacheable:
+                if self.verify:
+                    # F3 store side: only chain-faithful payloads may enter
+                    # the cross-query cache.
+                    self._gate(check_cache_store(
+                        predicate_chain(build_leaf),
+                        build_masked=not cacheable))
                 self.filter_cache.store(ck, payload, build_stats)
         keep = probe_filter_mask(rf, payload,
                                  probe.table.column(rf.probe_key))
         table = probe.table.with_valid(probe.table.valid & keep)
         measured = table.measure()
-        self._filters.append(FilterDecision(rf, probe.table.count(),
-                                            int(measured.cardinality),
-                                            self.p, cached=cached))
+        decision = FilterDecision(rf, probe.table.count(),
+                                  int(measured.cardinality),
+                                  self.p, cached=cached)
+        if self.verify:
+            self._gate(audit_filter_decision(decision))
+        self._filters.append(decision)
         return _Annotated(table, measured,
                           probe.estimated.scaled(rf.keep_est))
 
@@ -430,7 +505,15 @@ class Executor:
               lstats: TableStats, rstats: TableStats, lk: str, rk: str,
               join_type: JoinType, hint) -> _Annotated:
         """Select (per strategy) + execute one physical join; audit it."""
-        props = JoinProperties(join_type=join_type, hint=hint)
+        # Distribution properties: a side already hash-partitioned on its
+        # join key gets its shuffle elided by the engine, so the model's
+        # shuffle-family quotes drop that side's network term (the
+        # redundant-exchange finding plan analysis rule E2 pins).
+        props = JoinProperties(join_type=join_type, hint=hint,
+                               left_partitioned=(left.table.partitioned_by
+                                                 == lk),
+                               right_partitioned=(right.table.partitioned_by
+                                                  == rk))
         if self.skew_aware:
             # Adaptive runtime statistic beyond (size, cardinality): the
             # join-key straggler factor from per-partition load histograms.
@@ -447,14 +530,46 @@ class Executor:
                     key_skew(right.table, rk, self.p, self.skew_floor))
         sel = self.strategy.select(lstats, rstats, props, self.p)
         sel = self._engine_feasible(sel, lstats, rstats, props)
+        if self.verify:
+            # Pre-run cost audit (C1/C2/S1): a bad selection is caught
+            # before any bytes move.
+            self._gate(audit_selection(sel, lstats, rstats, props,
+                                       self._params))
         out, rep = self._run_join_with_retry(sel, left.table, right.table,
                                              lk, rk, join_type.value)
         if self.compact:
             out = compact_partitions(out)
-        self._decisions.append(JoinDecision(sel, lstats, rstats, rep))
+        if self.verify:
+            # Post-run exchange audit (E1/E2): every elision proven
+            # necessary, every proven partitioning actually elided.
+            self._gate(audit_exchanges(sel, props, rep))
+        self._decisions.append(JoinDecision(sel, lstats, rstats, rep,
+                                            props=props))
         measured = out.measure()
         est = estimate_join(left.estimated, right.estimated)
         return _Annotated(out, measured, est)
+
+    def _pad_outer_rows(self, ann: _Annotated, spill: Table) -> _Annotated:
+        """LEFT_OUTER padding path: re-inject probe rows a runtime filter
+        dropped. Those rows provably have no build match (filter kinds have
+        no false negatives), so they re-enter exactly as the join would
+        have emitted them: probe columns intact, build payload columns
+        zero-padded, ``_matched`` False (bool zero)."""
+        out = ann.table
+        cols = {}
+        for name, col in out.columns.items():
+            if name in spill.columns:
+                pad = spill.columns[name]
+            else:
+                pad = jnp.zeros(spill.valid.shape, dtype=col.dtype)
+            cols[name] = jnp.concatenate([col, pad], axis=1)
+        valid = jnp.concatenate([out.valid, spill.valid], axis=1)
+        # The appended rows sit in the probe's original layout, so any
+        # hash-partitioning the join established no longer holds.
+        table = Table(cols, valid, partitioned_by=None)
+        if self.compact:
+            table = compact_partitions(table)
+        return _Annotated(table, table.measure(), ann.estimated)
 
     def _engine_feasible(self, sel: Selection, lstats: TableStats,
                          rstats: TableStats,
@@ -470,6 +585,9 @@ class Executor:
                 and rstats.size_bytes > lstats.size_bytes):
             return dataclasses.replace(
                 sel, method=JoinMethod.SHUFFLE_HASH,
+                # Honest audit trail: the quoted cost must be the cost of
+                # the method that actually runs, not the voided broadcast.
+                cost=sel.costs.get(JoinMethod.SHUFFLE_HASH, sel.cost),
                 reason=sel.reason + "; engine: build side larger -> shuffle")
         # (The salted method needs no twin guard: selection only emits it
         # when the A role sits on the plan's left — the side the engine
@@ -516,6 +634,9 @@ class Executor:
             step = (self._replan_step(cur_stats, joined, rest, stats, retain,
                                       edges)
                     or self._fallback_step(fallback, joined, edges))
+            if self.verify:
+                # R1: adaptive re-plans only follow real join-graph edges.
+                self._gate(check_replan_step(step, joined, edges))
             b = step.build
             cur = self._join(cur, anns[b], cur_stats, stats[b],
                              step.probe_key, step.build_key, JoinType.INNER,

@@ -5,7 +5,7 @@ exchange boundaries that split the plan into query stages (§2.3)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 from ..core.cost_model import JoinMethod
 from ..core.selection import JoinType
@@ -102,6 +102,108 @@ def walk(plan: Node):
     yield plan
     for c in plan.children():
         yield from walk(c)
+
+
+def walk_paths(plan: Node, path: str = "root"):
+    """Pre-order walk yielding ``(path, node)`` pairs, where ``path`` is a
+    dotted locator like ``root.left.child`` — the plan path the static
+    analyzer attaches to every violation so a failing rule names the exact
+    operator, not just the plan."""
+    yield path, plan
+    if isinstance(plan, Join):
+        yield from walk_paths(plan.left, path + ".left")
+        yield from walk_paths(plan.right, path + ".right")
+    else:
+        for c in plan.children():
+            yield from walk_paths(c, path + ".child")
+
+
+# ---------------------------------------------------------------------------
+# Distribution property lattice (plan analysis support): how an operator's
+# output is laid out across the engine's p partitions — Spark
+# EnsureRequirements-style physical properties, used by the plan analyzer
+# to prove every exchange of a chosen join method necessary (no missing
+# shuffle) and sufficient (no redundant re-shuffle of a side already
+# hash-partitioned on its join key).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Distribution:
+    """Physical data-distribution property of an operator's output.
+
+    ``kind`` is one of:
+
+      * ``"hash"`` — rows are hash-partitioned by column ``key`` (the
+        output-partitioning property a shuffle on ``key`` establishes;
+        ``Table.partitioned_by`` is its runtime shadow),
+      * ``"broadcast"`` — every partition holds a full replica,
+      * ``"singleton"`` — all rows live in one partition,
+      * ``"arbitrary"`` — no guarantee (round-robin placement, salted
+        shuffles, or any layout the analyzer cannot prove stronger).
+
+    The lattice order is arbitrary < {hash(key), broadcast, singleton}:
+    ``arbitrary`` is the sound fallback whenever inference loses track.
+    """
+
+    kind: str
+    key: Optional[str] = None
+
+    def partitioned_on(self, key: str) -> bool:
+        """True iff rows are provably hash-partitioned by ``key`` — the
+        condition under which a shuffle on ``key`` may be elided."""
+        return self.kind == "hash" and self.key == key
+
+
+#: The bottom of the lattice: no layout guarantee.
+ARBITRARY = Distribution("arbitrary")
+BROADCAST = Distribution("broadcast")
+SINGLETON = Distribution("singleton")
+
+
+def hash_dist(key: str) -> Distribution:
+    """Hash-partitioned-on-``key`` distribution."""
+    return Distribution("hash", key)
+
+
+def infer_distribution(node: Node) -> Distribution:
+    """Static bottom-up distribution inference over a logical plan.
+
+    Mirrors the engine's output-partitioning rules where the logical plan
+    determines them (scans land round-robin; filters preserve placement;
+    a projection keeps the hash property only while the key survives;
+    a group-by shuffles by its group key) and falls back to ARBITRARY for
+    joins, whose output distribution depends on the physical method —
+    :func:`join_output_distribution` resolves those once a method is known.
+    """
+    if isinstance(node, Scan):
+        return ARBITRARY
+    if isinstance(node, Filter):
+        return infer_distribution(node.child)
+    if isinstance(node, Project):
+        d = infer_distribution(node.child)
+        if d.kind == "hash" and d.key not in node.columns:
+            return ARBITRARY
+        return d
+    if isinstance(node, Aggregate):
+        return hash_dist(node.key)
+    if isinstance(node, Join):
+        return ARBITRARY
+    raise TypeError(f"unknown plan node {type(node)}")
+
+
+def join_output_distribution(method: JoinMethod, probe: Distribution,
+                             probe_key: str) -> Distribution:
+    """Output distribution of one physical join, given the probe (plan
+    left) side's input distribution — the engine's rules in
+    ``joins/methods.py``: broadcast-family joins leave the probe side in
+    place (its distribution survives), shuffle hash/sort co-partition both
+    sides by the probe key, and salted or cartesian placement is
+    key-independent."""
+    if method in (JoinMethod.BROADCAST_HASH, JoinMethod.BROADCAST_NL):
+        return probe
+    if method in (JoinMethod.SHUFFLE_HASH, JoinMethod.SHUFFLE_SORT):
+        return hash_dist(probe_key)
+    return ARBITRARY
 
 
 # ---------------------------------------------------------------------------

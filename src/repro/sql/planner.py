@@ -518,13 +518,18 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
              params: Optional[CostParams] = None,
              pushdown: bool = True, prune: bool = True,
              reorder: bool = True, bushy: bool = False,
-             min_region: int = 3) -> OptimizedPlan:
+             min_region: int = 3, verify: bool = False) -> OptimizedPlan:
     """Full logical optimization pass.
 
     Statistics come from ``catalog`` (exact base stats) unless ``base_stats``
     is given. Regions smaller than ``min_region`` relations are left in plan
     order (a 2-relation region has nothing to reorder — side roles are
     already assigned by Algorithm 1).
+
+    ``verify=True`` arms the plan-analysis debug gate: the input plan is
+    statically analyzed, and the rewritten plan must pass the same
+    analysis *and* preserve the output schema (rule P2) — any violation
+    raises ``PlanVerificationError``.
     """
     if schema is None:
         if catalog is None:
@@ -535,6 +540,15 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
         base_stats = catalog_base_stats(catalog) if catalog else {}
     if params is None:
         params = CostParams(p=catalog.p if catalog else 8, w=1.0)
+    original = plan
+    if verify:
+        # Imported here: plan_analysis is optimizer-independent, but
+        # keeping the planner import-light avoids pulling the analyzer
+        # into every planner consumer.
+        from .plan_analysis import PlanVerificationError, analyze_plan
+        violations = analyze_plan(plan, schema)
+        if violations:
+            raise PlanVerificationError(violations)
 
     if pushdown:
         plan = push_down_filters(plan, schema)
@@ -578,7 +592,15 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
             return dataclasses.replace(node, child=rewrite(node.child))
         return node
 
-    return OptimizedPlan(rewrite(plan), regions)
+    rewritten = rewrite(plan)
+    if verify:
+        from .plan_analysis import (PlanVerificationError, analyze_plan,
+                                    check_schema_preserved)
+        violations = (check_schema_preserved(original, rewritten, schema)
+                      + analyze_plan(rewritten, schema))
+        if violations:
+            raise PlanVerificationError(violations)
+    return OptimizedPlan(rewritten, regions)
 
 
 def build_region_plan_order(graph: JoinGraph) -> Node:

@@ -188,24 +188,18 @@ def probe_filter_mask(rf: RuntimeFilter, payload, keys: jax.Array
 # Cross-query filter cache
 # ---------------------------------------------------------------------------
 
-def filter_cache_key(leaf: Node, build_key: str, kind: str, m_bits: int,
-                     k: int) -> Optional[tuple]:
-    """Canonical cache identity of one (build leaf, kind, params) combo.
+def predicate_chain(leaf: Node) -> Optional[Tuple[str, tuple]]:
+    """Normalized conjunctive predicate chain of a Scan-rooted leaf.
 
-    The payload is a pure function of the build leaf's surviving key
-    *set*, which for a Scan-rooted leaf is fully determined by (table,
-    conjunctive predicate chain, key column): conjunctive filters
-    commute, so the chain is normalized by sorting its (column, op,
-    value, value2) specs — ``F1(F2(scan))`` and ``F2(F1(scan))`` share an
-    entry — and projections are transparent (they never change the key
-    column's values). The kind and its size parameters (``m_bits``, and
-    ``k`` for bloom) complete the key: a differently-sized bloom array is
-    a different payload even over the same key set.
-
-    Returns None — uncacheable — for leaves not rooted in a Scan (e.g.
-    aggregated subqueries): their key set depends on the whole subtree's
-    execution, which this normalization does not capture.
-    """
+    Returns ``(table, sorted (column, op, value, value2) specs)`` —
+    conjunctive filters commute, so sorting makes ``F1(F2(scan))`` and
+    ``F2(F1(scan))`` identical, and projections are transparent (they
+    never change a column's values). Returns None for leaves not rooted
+    in a Scan (e.g. aggregated subqueries), whose surviving key set is
+    not determined by a predicate chain. This normalization is the
+    ground truth both for ``filter_cache_key`` and for the analyzer's
+    cache-reuse rule (a stored payload may only serve an edge whose
+    chain is a superset of the stored one)."""
     preds = []
     node = leaf
     while True:
@@ -218,7 +212,29 @@ def filter_cache_key(leaf: Node, build_key: str, kind: str, m_bits: int,
         break
     if not isinstance(base, Scan):
         return None
-    return (base.table, tuple(sorted(preds)), build_key, kind, m_bits, k)
+    return base.table, tuple(sorted(preds))
+
+
+def filter_cache_key(leaf: Node, build_key: str, kind: str, m_bits: int,
+                     k: int) -> Optional[tuple]:
+    """Canonical cache identity of one (build leaf, kind, params) combo.
+
+    The payload is a pure function of the build leaf's surviving key
+    *set*, which for a Scan-rooted leaf is fully determined by its
+    :func:`predicate_chain` plus the key column. The kind and its size
+    parameters (``m_bits``, and ``k`` for bloom) complete the key: a
+    differently-sized bloom array is a different payload even over the
+    same key set.
+
+    Returns None — uncacheable — for leaves not rooted in a Scan (e.g.
+    aggregated subqueries): their key set depends on the whole subtree's
+    execution, which the chain normalization does not capture.
+    """
+    chain = predicate_chain(leaf)
+    if chain is None:
+        return None
+    table, preds = chain
+    return (table, preds, build_key, kind, m_bits, k)
 
 
 @dataclasses.dataclass

@@ -29,6 +29,11 @@ class Strategy:
     #: filtered join plus the filter's build + broadcast is strictly
     #: cheaper.
     runtime_filters: bool = False
+    #: When True the Executor arms the plan-analysis debug gates: every
+    #: plan (including adaptive re-plans and runtime-filter placements) is
+    #: verified against the static rule set before/while running, and any
+    #: violation raises ``PlanVerificationError`` naming the rule.
+    verify: bool = False
 
     def select(self, left: TableStats, right: TableStats,
                props: JoinProperties, p: int) -> Selection:
@@ -140,6 +145,7 @@ class ReorderingStrategy(Strategy):
         self.filter_kinds = getattr(self.inner, "filter_kinds",
                                     DEFAULT_FILTER_KINDS)
         self.filter_cache = getattr(self.inner, "filter_cache", None)
+        self.verify = getattr(self.inner, "verify", False)
         if self.w is None:
             self.w = getattr(self.inner, "w", 1.0)
 
@@ -190,6 +196,7 @@ class FilteredStrategy(Strategy):
         self.reorder = getattr(self.inner, "reorder", False)
         self.skew_aware = getattr(self.inner, "skew_aware", False)
         self.skew_floor = getattr(self.inner, "skew_floor", 1.1)
+        self.verify = getattr(self.inner, "verify", False)
         self.w = getattr(self.inner, "w", 1.0)
 
     def select(self, left, right, props, p):

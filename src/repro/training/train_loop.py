@@ -9,12 +9,10 @@ checkpoints, resume-from-latest, and deterministic data replay.
 
 from __future__ import annotations
 
-import functools
 import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

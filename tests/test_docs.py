@@ -12,6 +12,7 @@ import pathlib
 import re
 
 import repro.core.cost_model as cost_model
+import repro.sql.plan_analysis as plan_analysis
 
 ROOT = pathlib.Path(__file__).parent.parent
 DOCS = ROOT / "docs"
@@ -46,6 +47,33 @@ def test_cost_model_doc_covers_every_public_name():
     assert not missing, (
         f"docs/cost_model.md is missing {sorted(missing)} — every public "
         "cost-model name needs a row in the equation map")
+
+
+def test_plan_analysis_all_matches_public_surface():
+    assert set(plan_analysis.__all__) == _public_surface(plan_analysis)
+
+
+def test_plan_analysis_doc_covers_every_rule_and_name():
+    """docs/plan_analysis.md documents every rule in the RULES registry
+    (as a `### `-headed section, so each rule gets invariant + failure
+    example, not a passing mention) and backticks every public name."""
+    doc = (DOCS / "plan_analysis.md").read_text()
+    for rule_id in plan_analysis.RULES:
+        assert f"### `{rule_id}`" in doc, (
+            f"docs/plan_analysis.md has no section for {rule_id}")
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", doc))
+    missing = set(plan_analysis.__all__) - documented
+    assert not missing, (
+        f"docs/plan_analysis.md is missing {sorted(missing)}")
+
+
+def test_rule_registry_is_consistent():
+    """Registry hygiene: ids key their own Rule objects, severities are
+    from the documented vocabulary, invariants are real sentences."""
+    for rule_id, rule in plan_analysis.RULES.items():
+        assert rule.rule_id == rule_id
+        assert rule.severity in ("error", "perf"), rule_id
+        assert len(rule.invariant) > 20, rule_id
 
 
 def _markdown_files():

@@ -17,6 +17,7 @@ from repro.sql import (Executor, FilteredStrategy, RelJoinStrategy,
                        ReorderingStrategy, SkewAwareStrategy, all_queries,
                        filtered_queries, plan_runtime_filters)
 from repro.sql.logical import Aggregate, Filter, Join, JoinEdge, Scan
+from repro.core.selection import JoinType
 from repro.core.stats import TableStats
 
 
@@ -120,6 +121,62 @@ def test_filtered_strategy_preserves_baseline_queries(catalog, qname):
     base = Executor(catalog, RelJoinStrategy()).execute(plan)
     filt = Executor(catalog, FilteredStrategy()).execute(plan)
     assert rows_close(_rows(filt), _rows(base)), qname
+
+
+# ---------------------------------------------------------------------------
+# Join-type safety: one regression test per join type (rule F1's contract)
+# ---------------------------------------------------------------------------
+
+
+def _typed_join(join_type):
+    """Fact joined to a selective dimension — selective enough that the
+    planner wants a probe-side filter whenever the type allows one."""
+    build = Filter(Scan("item"), "i_category", "lt", 3, selectivity=0.3)
+    return Join(Scan("store_sales"), build, "ss_item_sk", "i_item_sk",
+                join_type=join_type)
+
+
+@pytest.mark.parametrize("join_type", [JoinType.INNER, JoinType.LEFT_SEMI,
+                                       JoinType.LEFT_OUTER])
+def test_filterable_join_types_preserve_results(catalog, join_type):
+    """INNER/LEFT_SEMI drop-only semantics and the LEFT_OUTER padding path
+    all yield byte-identical results with the filter actually applied."""
+    plan = _typed_join(join_type)
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy(), verify=True).execute(plan)
+    assert filt.filters, f"{join_type.value}: no filter planned"
+    assert rows_close(_rows(filt), _rows(base)), join_type.value
+
+
+def test_left_outer_padding_restores_unmatched_rows(catalog):
+    """The filter drops unmatched probe rows before the join; the padding
+    path must re-inject every one of them null-padded with _matched=False,
+    so row count and the matched/unmatched split equal the unfiltered
+    run's."""
+    plan = _typed_join(JoinType.LEFT_OUTER)
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy(), verify=True).execute(plan)
+    (f,) = filt.filters
+    assert f.rows_after < f.rows_before
+    assert filt.rows == base.rows  # every probe row survives
+
+    def matched_count(res):
+        rows = res.table.to_numpy()
+        return int(rows["i_item_sk_matched"].sum())
+
+    assert matched_count(filt) == matched_count(base)
+    # The padded rows are exactly the unmatched remainder.
+    assert filt.rows - matched_count(filt) > 0
+
+
+def test_left_anti_never_filtered(catalog):
+    """LEFT_ANTI keeps exactly the rows a build-key filter would drop:
+    nothing may ever be planned, and results stay identical."""
+    plan = _typed_join(JoinType.LEFT_ANTI)
+    base = Executor(catalog, RelJoinStrategy()).execute(plan)
+    filt = Executor(catalog, FilteredStrategy(), verify=True).execute(plan)
+    assert filt.filters == []
+    assert rows_close(_rows(filt), _rows(base))
 
 
 def test_filter_pushed_below_earlier_exchange(catalog):

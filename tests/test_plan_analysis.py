@@ -1,0 +1,341 @@
+"""Plan-lint tests: one deliberate corruption per rule (each must trip
+exactly its named rule), the elision-aware cost-model fix the analyzer's
+E2 rule pinned, and clean gated passes over the golden query suite."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.cost_model import CostParams, JoinMethod
+from repro.core.selection import (JoinProperties, JoinType, Selection,
+                                  select_join_method)
+from repro.core.stats import TableStats
+from repro.joins.exchange import ExchangeReport
+from repro.joins.methods import JoinReport
+from repro.sql import (Executor, FilterCache, FilteredStrategy,
+                       PlanVerificationError, RelJoinStrategy,
+                       ReorderingStrategy, SkewAwareStrategy, all_queries,
+                       analyze_plan, every_query, filtered_queries, optimize,
+                       skewed_queries, verify_execution)
+from repro.sql.logical import (Aggregate, Filter, Join, JoinEdge, Project,
+                               RuntimeFilter, Scan)
+from repro.sql.plan_analysis import (RULES, audit_exchanges,
+                                     audit_join_decision, audit_selection,
+                                     catalog_dtypes, check_cache_reuse,
+                                     check_cache_store,
+                                     check_filter_placement,
+                                     check_filter_quote, check_replan_step,
+                                     check_schema_preserved,
+                                     infer_properties)
+from repro.sql.planner import JoinStep, catalog_schema
+
+PARAMS = CostParams(p=4, w=1.0)
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+def _stats(size, card, skew=1.0):
+    return TableStats(float(size), float(card)).with_skew(skew)
+
+
+def _rf(keep_est=0.2, benefit=1e6, cost=1e3, kind="bloom"):
+    return RuntimeFilter(0, 1, "fk", "pk", m_bits=1 << 13, k=4,
+                         sigma_est=0.2, keep_est=keep_est, benefit=benefit,
+                         cost=cost, kind=kind)
+
+
+def _shuffle_report(elided_left=False, elided_right=False):
+    ex = lambda e: ExchangeReport("shuffle", 0.0 if e else 1000.0, 0.0,
+                                  elided=e)
+    return JoinReport(JoinMethod.SHUFFLE_HASH,
+                      [ex(elided_left), ex(elided_right)], 0.0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Mutation tests: one corruption per rule, each trips exactly that rule.
+# ---------------------------------------------------------------------------
+
+
+def test_p1_unknown_column(catalog):
+    schema = catalog_schema(catalog)
+    plan = Filter(Scan("item"), "no_such_column", "eq", 1)
+    assert _rules(analyze_plan(plan, schema)) == {"P1_UNKNOWN_COLUMN"}
+    plan = Join(Scan("store_sales"), Scan("item"), "ss_item_sk",
+                "no_such_key")
+    assert _rules(analyze_plan(plan, schema)) == {"P1_UNKNOWN_COLUMN"}
+    assert _rules(analyze_plan(Scan("no_such_table"),
+                               schema)) == {"P1_UNKNOWN_COLUMN"}
+
+
+def test_p2_schema_changed(catalog):
+    schema = catalog_schema(catalog)
+    before = Join(Scan("store_sales"), Scan("item"), "ss_item_sk",
+                  "i_item_sk")
+    # A rewrite that silently drops output columns must trip P2.
+    after = Project(before, ("ss_item_sk", "i_brand"))
+    assert _rules(check_schema_preserved(before, after,
+                                         schema)) == {"P2_OUTPUT_SCHEMA_CHANGED"}
+    assert check_schema_preserved(before, before, schema) == []
+
+
+def test_p3_key_dtype_mismatch(catalog):
+    schema = catalog_schema(catalog)
+    dtypes = catalog_dtypes(catalog)
+    # float sales price against an int item surrogate key.
+    plan = Join(Scan("store_sales"), Scan("item"), "ss_sales_price",
+                "i_item_sk")
+    assert _rules(analyze_plan(plan, schema,
+                               dtypes)) == {"P3_KEY_DTYPE_MISMATCH"}
+    # Without dtype information the rule cannot fire (schema-only callers).
+    assert analyze_plan(plan, schema) == []
+
+
+def test_p4_bad_agg_op(catalog):
+    schema = catalog_schema(catalog)
+    plan = Aggregate(Scan("item"), "i_brand", (("i_price", "median"),))
+    assert _rules(analyze_plan(plan, schema)) == {"P4_BAD_AGG_OP"}
+
+
+def test_e1_missing_exchange():
+    sel = Selection(JoinMethod.SHUFFLE_HASH, "test", 1.0,
+                    {JoinMethod.SHUFFLE_HASH: 1.0})
+    # Probe shuffle elided without a proven hash-on-key distribution.
+    vs = audit_exchanges(sel, JoinProperties(), _shuffle_report(True, False))
+    assert _rules(vs) == {"E1_MISSING_EXCHANGE"}
+    # A broadcast exchange is never elidable, proven flags or not.
+    bsel = Selection(JoinMethod.BROADCAST_HASH, "test", 1.0,
+                     {JoinMethod.BROADCAST_HASH: 1.0})
+    brep = JoinReport(JoinMethod.BROADCAST_HASH,
+                      [ExchangeReport("broadcast", 0.0, 0.0, elided=True)],
+                      0.0, 0)
+    vs = audit_exchanges(bsel, JoinProperties(right_partitioned=True), brep)
+    assert _rules(vs) == {"E1_MISSING_EXCHANGE"}
+
+
+def test_e2_redundant_exchange():
+    sel = Selection(JoinMethod.SHUFFLE_HASH, "test", 1.0,
+                    {JoinMethod.SHUFFLE_HASH: 1.0})
+    # Build side proven partitioned on its key, yet re-shuffled: the
+    # redundant exchange the cost model used to re-pay.
+    vs = audit_exchanges(sel, JoinProperties(right_partitioned=True),
+                         _shuffle_report(False, False))
+    assert _rules(vs) == {"E2_REDUNDANT_EXCHANGE"}
+    assert audit_exchanges(sel, JoinProperties(right_partitioned=True),
+                           _shuffle_report(False, True)) == []
+
+
+def test_f1_filter_unsafe_join_type():
+    rf = _rf()
+    assert check_filter_placement(rf, JoinType.INNER) == []
+    assert check_filter_placement(rf, JoinType.LEFT_SEMI) == []
+    # LEFT_OUTER is only safe via the padding path.
+    assert _rules(check_filter_placement(
+        rf, JoinType.LEFT_OUTER)) == {"F1_FILTER_UNSAFE_JOIN_TYPE"}
+    assert check_filter_placement(rf, JoinType.LEFT_OUTER, padded=True) == []
+    # LEFT_ANTI drops exactly the kept rows — never safe, padded or not.
+    assert _rules(check_filter_placement(
+        rf, JoinType.LEFT_ANTI,
+        padded=True)) == {"F1_FILTER_UNSAFE_JOIN_TYPE"}
+
+
+def test_f2_filter_not_cheaper():
+    assert check_filter_quote(_rf()) == []
+    assert _rules(check_filter_quote(
+        _rf(keep_est=1.0))) == {"F2_FILTER_NOT_CHEAPER"}
+    assert _rules(check_filter_quote(
+        _rf(benefit=10.0, cost=10.0))) == {"F2_FILTER_NOT_CHEAPER"}
+
+
+def test_f3_cache_chain_mismatch():
+    base = ("item", (("i_category", "lt", 3.0, 0.0),))
+    wider = ("item", ())
+    assert check_cache_reuse(base, base) == []
+    # Stored subset of the edge chain: payload is a key superset — safe.
+    assert check_cache_reuse(wider, base) == []
+    # Stored chain has a predicate the edge lacks: payload may miss keys.
+    assert _rules(check_cache_reuse(base,
+                                    wider)) == {"F3_CACHE_CHAIN_MISMATCH"}
+    assert _rules(check_cache_reuse(
+        base, ("store", ()))) == {"F3_CACHE_CHAIN_MISMATCH"}
+    assert _rules(check_cache_reuse(None, base)) == {"F3_CACHE_CHAIN_MISMATCH"}
+    # Store side: a masked build's payload must not enter the cache.
+    assert check_cache_store(base, build_masked=False) == []
+    assert _rules(check_cache_store(
+        base, build_masked=True)) == {"F3_CACHE_CHAIN_MISMATCH"}
+
+
+def test_s1_salt_unreplicable_build():
+    sel = Selection(JoinMethod.SALTED_SHUFFLE_HASH, "test", 1.0, {},
+                    swapped_sides=True, salt_r=4)
+    vs = audit_selection(sel, _stats(1000, 100), _stats(2000, 200),
+                         JoinProperties(), PARAMS)
+    assert _rules(vs) == {"S1_SALT_UNREPLICABLE_BUILD"}
+
+
+def test_c1_negative_cost_term():
+    sel = Selection(JoinMethod.SHUFFLE_HASH, "test", 1.0, {})
+    vs = audit_selection(sel, _stats(-5, 100), _stats(2000, 200),
+                         JoinProperties(), PARAMS)
+    assert _rules(vs) == {"C1_NEGATIVE_COST_TERM"}
+    bad = Selection(JoinMethod.SHUFFLE_HASH, "test", -1.0,
+                    {JoinMethod.SHUFFLE_HASH: -1.0})
+    vs = audit_selection(bad, _stats(1000, 100), _stats(2000, 200),
+                         JoinProperties(), PARAMS)
+    assert _rules(vs) == {"C1_NEGATIVE_COST_TERM"}
+
+
+def test_c2_nonminimal_method():
+    left, right = _stats(8000, 800), _stats(7000, 700)
+    sel = select_join_method(left, right, JoinProperties(), PARAMS)
+    assert sel.method is JoinMethod.SHUFFLE_HASH  # k ~ 1.14 < k0 = 7
+    assert audit_selection(sel, left, right, JoinProperties(), PARAMS) == []
+    # Swap in the pricier method at its own quote: exactly C2.
+    worse = dataclasses.replace(
+        sel, method=JoinMethod.BROADCAST_HASH,
+        cost=sel.costs[JoinMethod.BROADCAST_HASH])
+    vs = audit_selection(worse, left, right, JoinProperties(), PARAMS)
+    assert _rules(vs) == {"C2_NONMINIMAL_METHOD"}
+    # Right method misquoted at the wrong cost: also C2.
+    misquoted = dataclasses.replace(sel, cost=sel.cost * 2)
+    vs = audit_selection(misquoted, left, right, JoinProperties(), PARAMS)
+    assert _rules(vs) == {"C2_NONMINIMAL_METHOD"}
+
+
+def test_r1_replan_broken_edge():
+    edges = [JoinEdge(0, 1, "fk", "pk"), JoinEdge(1, 2, "fk2", "pk2")]
+    ok = JoinStep(1, "fk", "pk", None, 0.0)
+    assert check_replan_step(ok, {0}, edges) == []
+    # Build leaf with no edge into the joined set.
+    assert _rules(check_replan_step(JoinStep(2, "fk2", "pk2", None, 0.0),
+                                    {0}, edges)) == {"R1_REPLAN_BROKEN_EDGE"}
+    # Right leaf, wrong keys.
+    assert _rules(check_replan_step(JoinStep(1, "fk", "pk2", None, 0.0),
+                                    {0}, edges)) == {"R1_REPLAN_BROKEN_EDGE"}
+
+
+def test_every_rule_has_a_mutation_test():
+    """The registry and this file grow together."""
+    import pathlib
+    src = pathlib.Path(__file__).read_text()
+    for rule_id in RULES:
+        assert f'"{rule_id}"' in src, f"no mutation test mentions {rule_id}"
+
+
+# ---------------------------------------------------------------------------
+# The elision-aware cost fix (the analyzer's E2 finding, pinned).
+# ---------------------------------------------------------------------------
+
+
+def test_prepartitioned_probe_discounts_shuffle_quote():
+    """The redundant-exchange finding: a probe side already partitioned on
+    its join key ships nothing in a shuffle join, so the quote must drop
+    its network term — here that flips the selection from broadcast to
+    shuffle. Before the fix the model re-paid the elided exchange and
+    broadcast won."""
+    left, right = _stats(8000, 800), _stats(1000, 100)
+    base = select_join_method(left, right, JoinProperties(), PARAMS)
+    assert base.method is JoinMethod.BROADCAST_HASH  # k = 8 > k0 = 7
+    pre = select_join_method(
+        left, right, JoinProperties(left_partitioned=True), PARAMS)
+    assert pre.method is JoinMethod.SHUFFLE_HASH
+    # coef_a drops to 1.0; coef_b stays (w*p - w + 2p)/p = 2.75 at p=4, w=1.
+    assert pre.costs[JoinMethod.SHUFFLE_HASH] == pytest.approx(
+        8000 + 2.75 * 1000)
+    # Salted quotes never take the discount (salting re-keys the data).
+    assert pre.costs[JoinMethod.SALTED_SHUFFLE_HASH] == pytest.approx(
+        base.costs[JoinMethod.SALTED_SHUFFLE_HASH])
+
+
+def test_prepartitioned_build_discount():
+    left, right = _stats(8000, 800), _stats(1000, 100)
+    base = select_join_method(left, right, JoinProperties(), PARAMS)
+    pre = select_join_method(
+        left, right, JoinProperties(right_partitioned=True), PARAMS)
+    # B-coefficient falls from 2.75 to 2.0 (the build still replicates
+    # p-fold locally but ships nothing).
+    assert pre.costs[JoinMethod.SHUFFLE_HASH] == pytest.approx(
+        base.costs[JoinMethod.SHUFFLE_HASH] - 0.75 * 1000)
+
+
+def test_agg_agg_join_elides_and_discounts(catalog):
+    """q4 joins two aggregates both keyed on the join key: the engine
+    elides both shuffles, the decision's recorded properties prove it,
+    and the exchange audit finds zero redundant exchanges."""
+    res = Executor(catalog, RelJoinStrategy(), verify=True).execute(
+        all_queries()["q4_agg_agg"])
+    (d,) = res.decisions
+    assert d.props.left_partitioned and d.props.right_partitioned
+    assert all(e.elided for e in d.report.exchanges)
+    assert d.network_bytes == 0.0
+    assert audit_join_decision(d, CostParams(p=catalog.p, w=1.0)) == []
+
+
+# ---------------------------------------------------------------------------
+# Clean gated passes: the golden suite under verify=True.
+# ---------------------------------------------------------------------------
+
+_ALL = {**every_query(), **skewed_queries(), **filtered_queries()}
+
+
+@pytest.mark.parametrize("qname", sorted(_ALL))
+def test_golden_queries_clean_under_verify(catalog, qname):
+    plan = _ALL[qname]
+    optimize(plan, catalog, verify=True)
+    res = Executor(catalog, RelJoinStrategy(), verify=True).execute(plan)
+    assert verify_execution(res, CostParams(p=catalog.p, w=1.0)) == []
+
+
+_COMPOSED = ("q2_chain7", "q7_filtered_fact", "q13_fact_fact_first",
+             "q19_filtered_customer", "q21_catalog_filtered_dates")
+
+
+@pytest.mark.parametrize("qname", _COMPOSED)
+def test_composed_strategies_clean_under_verify(catalog, qname):
+    """Adaptive re-plans, runtime-filter placements, cache traffic and
+    skew-aware selections all pass the gates."""
+    plan = _ALL[qname]
+    cache = FilterCache()
+    strat = FilteredStrategy(ReorderingStrategy(RelJoinStrategy()),
+                             cache=cache)
+    Executor(catalog, strat, verify=True).execute(plan)
+    # Warm second run: cache hits go through the F3 reuse gate.
+    Executor(catalog, strat, verify=True).execute(plan)
+    Executor(catalog, SkewAwareStrategy(), verify=True).execute(plan)
+
+
+def test_verify_flag_via_strategy(catalog):
+    strat = RelJoinStrategy()
+    strat.verify = True
+    wrapped = FilteredStrategy(strat)
+    assert wrapped.verify
+    assert Executor(catalog, wrapped).verify
+
+
+def test_verify_raises_on_bad_plan(catalog):
+    plan = Join(Scan("store_sales"), Scan("item"), "ss_item_sk",
+                "no_such_key")
+    with pytest.raises(PlanVerificationError) as ei:
+        Executor(catalog, RelJoinStrategy(), verify=True).execute(plan)
+    assert {v.rule for v in ei.value.violations} == {"P1_UNKNOWN_COLUMN"}
+    # Gates disarmed (the default): the executor fails later and
+    # differently, or not at all — the analyzer is opt-in.
+    assert not Executor(catalog, RelJoinStrategy()).verify
+
+
+def test_infer_properties_tracks_rename_and_matched(catalog):
+    schema = catalog_schema(catalog)
+    plan = Join(Scan("store_sales"), Scan("item"), "ss_item_sk", "i_item_sk",
+                join_type=JoinType.LEFT_OUTER)
+    props, violations = infer_properties(plan, schema)
+    assert violations == []
+    cols = props["root"].columns
+    assert "i_item_sk_matched" in cols
+    assert props["root"].dtypes["i_item_sk_matched"] == "bool"
+    agg = Aggregate(Scan("item"), "i_brand", (("i_price", "mean"),
+                                              ("i_price", "count")))
+    props, _ = infer_properties(agg, schema, catalog_dtypes(catalog))
+    assert props["root"].dtypes["mean_i_price"] == "float32"
+    assert props["root"].dtypes["count_i_price"] == "int32"
+    assert props["root"].distribution.partitioned_on("i_brand")

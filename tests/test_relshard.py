@@ -1,15 +1,13 @@
 """RelShard planner tests: the paper's Eq.13 criterion driving sharding
 strategy selection, decision audit, and adaptive re-planning."""
 
-import dataclasses
-
 import pytest
 
 from repro.configs import get_config
 from repro.core.cost_model import CostParams, k0_threshold
 from repro.core.relshard import (W_TPU_DEFAULT, ShardingPlan, plan_model,
                                  replan)
-from repro.models.config import SHAPE_BY_NAME, ShapeConfig
+from repro.models.config import SHAPE_BY_NAME
 
 MESH = (("data", 16), ("model", 16))
 MESH_MP = (("pod", 2), ("data", 16), ("model", 16))

@@ -2,14 +2,11 @@
 modules, term arithmetic, and the model-FLOPs accounting."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.launch.roofline import (LINK_BW, PEAK_FLOPS, Roofline,
-                                   model_flops, parse_collective_bytes,
-                                   roofline_from_compiled)
+from repro.launch.roofline import (Roofline, model_flops,
+                                   parse_collective_bytes)
 from repro.models.config import SHAPE_BY_NAME
 
 SYNTH = """

@@ -4,7 +4,7 @@ import pytest
 from helpers.hypothesis_compat import given, settings
 from helpers.hypothesis_compat import strategies as st
 
-from repro.core import (AQE_BROADCAST_THRESHOLD_BYTES, CostParams, JoinMethod,
+from repro.core import (CostParams, JoinMethod,
                         JoinProperties, JoinType, TableStats, compute_psts,
                         k0_threshold, select_absolute_size, select_forced,
                         select_join_method, selections_differ, unknown_stats)

@@ -5,8 +5,6 @@ overflow-retry regression under Zipf-1.4 hot partitions."""
 
 import math
 
-import pytest
-
 from repro.core import cost_model as cm
 from repro.core.cost_model import CostParams, JoinMethod
 from repro.core.selection import JoinProperties, select_join_method

@@ -7,7 +7,7 @@ import pytest
 from repro.core.cost_model import JoinMethod, k0_threshold, CostParams
 from repro.joins.aggregate import group_aggregate
 from repro.sql import Executor, RelJoinStrategy, all_queries
-from repro.sql.logical import Aggregate, Filter, Join, Scan
+from repro.sql.logical import Filter, Join, Scan
 from repro.joins.ref import rows_as_set, rows_close
 
 

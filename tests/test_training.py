@@ -11,8 +11,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.relshard import plan_model
-from repro.launch.mesh import make_host_mesh, mesh_axes
-from repro.models import lm
+from repro.launch.mesh import make_host_mesh
 from repro.models.config import ShapeConfig
 from repro.training import checkpoint as ck
 from repro.training.data import DataConfig, batch_for_step
