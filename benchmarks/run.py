@@ -18,11 +18,16 @@ benchmark — the emitted rows plus profile metadata and wall time — which
 the CI smoke job uploads as the ``bench-smoke-json`` artifact, seeding the
 cross-PR benchmark trajectory.
 
-``--compare OLD NEW`` diffs two such artifacts (files or directories of
-``<bench>.json`` files) instead of running anything: every tracked metric
-— per-benchmark wall seconds and every timed row's ``us_per_call`` — is
-compared, and any regression beyond ``--threshold`` (default 10%) exits
-non-zero with the offenders listed.
+``--json-bundle FILE`` writes the same payloads as ONE file holding a
+JSON list — the committable form. ``BENCH_BASELINE.json`` at the repo
+root is such a bundle (from ``--smoke``); CI compares every push's fresh
+smoke run against it.
+
+``--compare OLD NEW`` diffs two such artifacts (files, bundles, or
+directories of ``<bench>.json`` files) instead of running anything: every
+tracked metric — per-benchmark wall seconds and every timed row's
+``us_per_call`` — is compared, and any regression beyond ``--threshold``
+(default 10%) exits non-zero with the offenders listed.
 """
 
 from __future__ import annotations
@@ -78,8 +83,10 @@ def _registry():
 
 
 def _load_artifacts(path: pathlib.Path) -> dict:
-    """Load one bench-JSON artifact file, or every ``*.json`` in a
-    directory, keyed by benchmark name."""
+    """Load bench-JSON artifacts keyed by benchmark name: one per-bench
+    file, a bundle file holding a JSON list of payloads (the committed
+    ``BENCH_BASELINE.json`` form), or a directory of ``*.json`` files
+    (each itself a payload or a bundle)."""
     if path.is_dir():
         files = sorted(path.glob("*.json"))
     else:
@@ -87,7 +94,8 @@ def _load_artifacts(path: pathlib.Path) -> dict:
     out = {}
     for f in files:
         payload = json.loads(f.read_text())
-        out[payload["bench"]] = payload
+        for p in payload if isinstance(payload, list) else [payload]:
+            out[p["bench"]] = p
     return out
 
 
@@ -138,6 +146,9 @@ def main(argv=None) -> None:
                     help="comma-separated subset of registered names")
     ap.add_argument("--json-out", default="",
                     help="directory for per-benchmark JSON result files")
+    ap.add_argument("--json-bundle", default="",
+                    help="write all results as one JSON-list bundle file "
+                         "(the BENCH_BASELINE.json form)")
     ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
                     help="diff two bench-JSON artifacts (files or "
                          "directories) instead of running; exit non-zero "
@@ -158,6 +169,10 @@ def main(argv=None) -> None:
     json_dir = pathlib.Path(args.json_out) if args.json_out else None
     if json_dir is not None:
         json_dir.mkdir(parents=True, exist_ok=True)
+    bundle_path = (pathlib.Path(args.json_bundle) if args.json_bundle
+                   else None)
+    capture = json_dir is not None or bundle_path is not None
+    bundle = []
     registry = _registry()
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -173,19 +188,24 @@ def main(argv=None) -> None:
             continue
         kwargs = smoke if args.smoke else (quick if args.quick else default)
         t1 = time.time()
-        if json_dir is not None:
+        if capture:
             common.start_capture()
         module.run(**kwargs)
         dt = time.time() - t1
-        if json_dir is not None:
+        if capture:
             profile = ("smoke" if args.smoke
                        else "quick" if args.quick else "default")
             payload = {"bench": name, "profile": profile, "kwargs": kwargs,
                        "seconds": round(dt, 3), "rows": common.end_capture()}
-            (json_dir / f"{name}.json").write_text(
-                json.dumps(payload, indent=1, default=str) + "\n")
+            bundle.append(payload)
+            if json_dir is not None:
+                (json_dir / f"{name}.json").write_text(
+                    json.dumps(payload, indent=1, default=str) + "\n")
         print(f"# {name} {dt:.1f}s", file=sys.stderr)
 
+    if bundle_path is not None:
+        bundle_path.write_text(
+            json.dumps(bundle, indent=1, default=str) + "\n")
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

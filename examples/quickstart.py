@@ -1,13 +1,16 @@
 """Quickstart: RelJoin in 60 seconds.
 
 1. Build a tiny star schema, 2. run one query under every selection
-strategy, 3. see why RelJoin picks what it picks (the k vs k0 criterion).
+strategy, 3. see why RelJoin picks what it picks (the k vs k0 criterion),
+4. run a query straight from SQL text.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import CostParams, k0_threshold
-from repro.sql import Executor, all_queries, default_strategies, generate
+from repro.sql import (Executor, all_queries, default_strategies, generate,
+                       parse_sql)
+from repro.sql.logical import signature
 
 
 def main():
@@ -32,6 +35,19 @@ def main():
              / max(min(d.left_stats.size_bytes, d.right_stats.size_bytes), 1))
         print(f"  join {i}: {d.selection.method.value:15s} k={k:8.1f} "
               f"({d.selection.reason})")
+
+    print("\nSame engine, straight from SQL text:")
+    plan = parse_sql("""
+        SELECT s_state, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN store ON ss_store_sk = s_store_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 11)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY s_state
+    """)
+    print(f"  plan: {signature(plan)}")
+    res = Executor(catalog, default_strategies()[-1]).execute(plan)
+    print(f"  rows={res.rows} methods={[m.value for m in res.methods()]}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,27 @@
-"""Mini SQL layer: logical plans, synthetic TPC-DS-like workload, selection
-strategies, the logical plan optimizer (pushdown / pruning / System-R join
-reordering), and the adaptive stage-wise executor."""
+"""Mini SQL layer: a SQL text front end (tokenizer, recursive-descent
+parser, binder, and pretty-printer), logical plans, synthetic TPC-DS-like
+workload, selection strategies, the logical plan optimizer (pushdown /
+pruning / System-R join reordering), and the adaptive stage-wise
+executor."""
 
+from .binder import SqlBindError, bind, parse_sql
 from .datagen import Catalog, generate
 from .executor import ExecutionResult, Executor, FilterDecision, JoinDecision
 from .logical import (Aggregate, Distribution, Filter, Join, JoinEdge,
                       JoinGraph, Node, Project, RuntimeFilter, Scan,
-                      extract_join_graph, infer_distribution, walk_paths)
+                      effective_selectivity, extract_join_graph,
+                      infer_distribution, walk_paths)
+from .parser import SqlSyntaxError, parse, tokenize
 from .plan_analysis import (RULES, PlanVerificationError, Rule, Violation,
                             analyze_plan, audit_join_decision,
                             verify_execution)
 from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
                       optimize, plan_runtime_filters, prune_projections,
                       push_down_filters)
+from .printer import to_sql
 from .queries import (all_queries, every_query, filtered_queries,
-                      misordered_queries, skewed_queries)
+                      misordered_queries, skewed_queries, text_queries)
+from .selectivity import derive_selectivity
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, FilterQuote, RuntimeFilterKind,
                               build_filter_payload, filter_cache_key,
@@ -23,7 +30,10 @@ from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
                          RelJoinStrategy, ReorderingStrategy,
                          SkewAwareStrategy, Strategy, default_strategies)
 
-__all__ = ["Catalog", "generate", "ExecutionResult", "Executor",
+__all__ = ["SqlBindError", "bind", "parse_sql", "SqlSyntaxError", "parse",
+           "tokenize", "to_sql", "derive_selectivity",
+           "effective_selectivity", "text_queries",
+           "Catalog", "generate", "ExecutionResult", "Executor",
            "FilterDecision", "JoinDecision", "Aggregate", "Distribution",
            "Filter", "Join",
            "JoinEdge", "JoinGraph", "Node", "Project", "RuntimeFilter",

@@ -57,7 +57,7 @@ SCHEMA = {
     "inventory": 30_000,        # medium fact
     "customer": 12_000,         # large dim (k < k0 vs fact)
     "item": 2_000,              # mid dim
-    "date_dim": 365,            # small dim
+    "date_dim": 360,            # small dim (explicit 360-day year: 12x30)
     "store": 60,                # tiny dim
     "promotion": 40,            # tiny dim
     "warehouse": 12,            # tiny dim
@@ -113,9 +113,13 @@ def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
         "i_brand": rng.integers(0, 100, n["item"]).astype(np.int32),
         "i_price": rng.uniform(1, 300, n["item"]).astype(np.float32),
     })
+    # Explicit 360-day calendar (12 months x 30 days): every month holds
+    # exactly 1/12 of the domain and every day-of-month exactly 1/30, so
+    # the suite's declared date selectivities are *exact*, not off-by-one
+    # (a 365-day year would wrap days 360-364 back into month 0).
     tables["date_dim"] = dim("date_dim", "d_date_sk", {
         "d_month": (np.arange(n["date_dim"]) // 30 % 12).astype(np.int32),
-        "d_year": (2000 + np.arange(n["date_dim"]) // 365).astype(np.int32),
+        "d_year": (2000 + np.arange(n["date_dim"]) // 360).astype(np.int32),
         "d_moy": (np.arange(n["date_dim"]) % 30).astype(np.int32),
     })
     tables["store"] = dim("store", "s_store_sk", {
@@ -186,4 +190,55 @@ PRIMARY_KEYS = {
     "date_dim": "d_date_sk", "store": "s_store_sk",
     "promotion": "p_promo_sk", "warehouse": "w_warehouse_sk",
     "household": "hd_demo_sk",
+}
+
+#: Static schema: ordered column names per table, exactly as ``generate``
+#: builds them (pinned by a test). The SQL binder resolves unqualified
+#: columns against this without needing a materialized catalog — column
+#: names are globally unique across the star schema by TPC-DS convention.
+TABLE_COLUMNS: Dict[str, tuple] = {
+    "customer": ("c_customer_sk", "c_region", "c_hdemo_sk", "c_income"),
+    "item": ("i_item_sk", "i_category", "i_brand", "i_price"),
+    "date_dim": ("d_date_sk", "d_month", "d_year", "d_moy"),
+    "store": ("s_store_sk", "s_state", "s_floor"),
+    "promotion": ("p_promo_sk", "p_channel"),
+    "warehouse": ("w_warehouse_sk", "w_state"),
+    "household": ("hd_demo_sk", "hd_buy_potential"),
+    "store_sales": ("ss_item_sk", "ss_store_sk", "ss_customer_sk",
+                    "ss_sold_date_sk", "ss_promo_sk", "ss_quantity",
+                    "ss_sales_price", "ss_net_profit"),
+    "catalog_sales": ("cs_item_sk", "cs_ship_date_sk",
+                      "cs_bill_customer_sk", "cs_warehouse_sk",
+                      "cs_quantity", "cs_sales_price"),
+    "inventory": ("inv_item_sk", "inv_date_sk", "inv_warehouse_sk",
+                  "inv_quantity_on_hand"),
+}
+
+#: Non-key column value domains as ``(lo, hi, integral)`` with half-open
+#: ``[lo, hi)`` bounds matching the ``generate`` draws (integers/uniform),
+#: plus the computed date columns' exact ranges under the 360-day
+#: calendar. ``derive_selectivity`` turns these into op-specific filter
+#: fractions; because only facts scale and every distribution is uniform,
+#: the derived fraction equals the measured one at any scale.
+COLUMN_DOMAINS: Dict[str, tuple] = {
+    "c_region": (0, 8, True), "c_income": (2e4, 2e5, False),
+    "i_category": (0, 10, True), "i_brand": (0, 100, True),
+    "i_price": (1, 300, False),
+    "d_month": (0, 12, True), "d_year": (2000, 2001, True),
+    "d_moy": (0, 30, True),
+    "s_state": (0, 12, True), "s_floor": (1e3, 1e5, False),
+    "p_channel": (0, 4, True), "w_state": (0, 12, True),
+    "hd_buy_potential": (0, 6, True),
+    "ss_quantity": (1, 100, True), "ss_sales_price": (1, 300, False),
+    "ss_net_profit": (-50, 150, False),
+    "cs_quantity": (1, 100, True), "cs_sales_price": (1, 300, False),
+    "inv_quantity_on_hand": (0, 1000, True),
+}
+
+#: Static key domains: FK and PK columns -> domain cardinality. Dimensions
+#: never scale (only FACTS do), so this is knowable without a catalog —
+#: it is exactly what ``generate`` stores in ``Catalog.key_domains``.
+STATIC_KEY_DOMAINS: Dict[str, float] = {
+    **{col: float(SCHEMA[dim]) for col, dim in FK_DIMENSIONS.items()},
+    **{pk: float(SCHEMA[t]) for t, pk in PRIMARY_KEYS.items()},
 }

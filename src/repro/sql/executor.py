@@ -33,7 +33,8 @@ from ..joins.methods import JoinReport, run_equi_join
 from ..joins.table import Table, compact_partitions
 from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
-                      RuntimeFilter, Scan, augment_edges, extract_join_graph,
+                      RuntimeFilter, Scan, augment_edges,
+                      effective_selectivity, extract_join_graph,
                       key_retain_fraction, leaf_retain_fraction)
 from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
                             audit_exchanges, audit_filter_decision,
@@ -306,8 +307,9 @@ class Executor:
             t = _apply_filter(child.table, node)
             # In-stage operator: runtime stats are *propagated estimates*
             # from the last materialization (paper §4.1 step 2).
-            measured = estimate_filter(child.measured, node.selectivity)
-            est = estimate_filter(child.estimated, node.selectivity)
+            sel = effective_selectivity(node)
+            measured = estimate_filter(child.measured, sel)
+            est = estimate_filter(child.estimated, sel)
             return _Annotated(t, measured, est)
 
         if isinstance(node, Project):
@@ -738,6 +740,8 @@ def _apply_filter(table: Table, f: Filter) -> Table:
     c = table.column(f.column)
     if f.op == "eq":
         m = c == f.value
+    elif f.op == "ne":
+        m = c != f.value
     elif f.op == "lt":
         m = c < f.value
     elif f.op == "le":
@@ -748,6 +752,12 @@ def _apply_filter(table: Table, f: Filter) -> Table:
         m = c >= f.value
     elif f.op == "between":
         m = (c >= f.value) & (c <= f.value2)
+    elif f.op == "in":
+        # OR of equalities against the literal list; an empty list keeps
+        # nothing (SQL's `x IN ()` has no match).
+        m = jnp.zeros_like(table.valid)
+        for v in f.values:
+            m = m | (c == v)
     else:
         raise ValueError(f"unknown filter op {f.op}")
     return table.with_valid(table.valid & m)

@@ -26,15 +26,33 @@ class Scan(Node):
 
 @dataclasses.dataclass(frozen=True)
 class Filter(Node):
+    """Single-column predicate. ``op`` is one of ``eq | ne | lt | le | gt |
+    ge | between | in``; ``value2`` is BETWEEN's upper bound and ``values``
+    IN's literal list (both ignored by the other ops). ``selectivity`` is
+    the declared static estimate — ``None`` means *underived*, and every
+    consumer goes through :func:`effective_selectivity`, which falls back
+    to the schema-derived estimate (``sql.selectivity.derive_selectivity``).
+    """
+
     child: Node
     column: str
-    op: str            # "eq" | "lt" | "le" | "gt" | "ge" | "between"
-    value: float
+    op: str
+    value: float = 0.0
     value2: float = 0.0
-    selectivity: float = 0.5  # static estimate used when stats are projected
+    values: Tuple[float, ...] = ()
+    selectivity: Optional[float] = None
 
     def children(self):
         return (self.child,)
+
+
+def effective_selectivity(f: Filter) -> float:
+    """The selectivity estimate a plan consumer should use: the declared
+    value when present, else the op/domain-derived one (declared wins)."""
+    if f.selectivity is not None:
+        return f.selectivity
+    from .selectivity import derive_selectivity
+    return derive_selectivity(f)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,14 +91,33 @@ class Aggregate(Node):
         return (self.child,)
 
 
+def _fmt_literal(v: float) -> str:
+    """Compact literal rendering for signatures (``6`` not ``6.0``)."""
+    return f"{v:g}"
+
+
+def filter_literal(f: Filter) -> str:
+    """The literal part of a Filter's signature tag: BETWEEN's two bounds,
+    IN's value list, or the single comparison constant."""
+    if f.op == "between":
+        return f"{_fmt_literal(f.value)}:{_fmt_literal(f.value2)}"
+    if f.op == "in":
+        return ",".join(_fmt_literal(v) for v in f.values)
+    return _fmt_literal(f.value)
+
+
 def signature(plan: Node) -> str:
     """Canonical one-line structural signature of a logical plan. Captures
-    join order, join keys/types and operator nesting — what the golden-plan
-    snapshots pin so optimizer edits can't silently reorder a plan."""
+    join order, join keys/types, filter predicates *including their
+    literals* and operator nesting — what the golden-plan snapshots pin so
+    optimizer edits can't silently reorder a plan. (Literals matter: two
+    plans differing only in a constant are different plans, and
+    signature-keyed consumers must never collide them.)"""
     if isinstance(plan, Scan):
         return plan.table
     if isinstance(plan, Filter):
-        return f"filter[{plan.column} {plan.op}]({signature(plan.child)})"
+        return (f"filter[{plan.column} {plan.op} {filter_literal(plan)}]"
+                f"({signature(plan.child)})")
     if isinstance(plan, Project):
         return f"project[{','.join(plan.columns)}]({signature(plan.child)})"
     if isinstance(plan, Aggregate):
@@ -263,7 +300,7 @@ def leaf_retain_fraction(node: Node) -> float:
     base, filters = filter_chain(node)
     frac = 1.0
     for f in filters:
-        frac *= min(max(f.selectivity, 0.0), 1.0)
+        frac *= min(max(effective_selectivity(f), 0.0), 1.0)
     if isinstance(base, Project):
         frac *= leaf_retain_fraction(base.child)
     return frac
@@ -280,7 +317,7 @@ def key_retain_fraction(node: Node, key: str) -> float:
     base, filters = filter_chain(node)
     frac = 1.0
     for f in filters:
-        frac *= min(max(f.selectivity, 0.0), 1.0)
+        frac *= min(max(effective_selectivity(f), 0.0), 1.0)
     if isinstance(base, Project):
         frac *= key_retain_fraction(base.child, key)
     elif isinstance(base, Aggregate) and base.key == key:
@@ -295,7 +332,7 @@ def _key_filter_fraction(node: Node, key: str) -> float:
     frac = 1.0
     for f in filters:
         if f.column == key:
-            frac *= min(max(f.selectivity, 0.0), 1.0)
+            frac *= min(max(effective_selectivity(f), 0.0), 1.0)
     if isinstance(base, Project):
         frac *= _key_filter_fraction(base.child, key)
     elif isinstance(base, Aggregate) and base.key == key:
@@ -324,7 +361,7 @@ def key_band_fraction(node: Node, key: str) -> Optional[float]:
     frac = None
     for f in filters:
         if f.column == key and f.op in _BAND_OPS:
-            s = min(max(f.selectivity, 0.0), 1.0)
+            s = min(max(effective_selectivity(f), 0.0), 1.0)
             frac = s if frac is None else frac * s
     child = None
     if isinstance(base, Project):

@@ -614,7 +614,7 @@ def verify_execution(result, params: CostParams) -> List[Violation]:
 
 def main(argv=None) -> int:
     """``python -m repro.sql.plan_analysis``: run all golden queries
-    (q1-q23) under every strategy with the debug gates armed, plus the
+    (q1-q32, including the text-only SQL suite) under every strategy with the debug gates armed, plus the
     static pass and the optimizer's P2 gate per query. Exits non-zero on
     any violation."""
     import argparse
@@ -622,7 +622,8 @@ def main(argv=None) -> int:
     from .datagen import generate
     from .executor import Executor
     from .planner import catalog_schema, optimize
-    from .queries import every_query, filtered_queries, skewed_queries
+    from .queries import (every_query, filtered_queries, skewed_queries,
+                          text_queries)
     from .strategies import (FilteredStrategy, RelJoinStrategy,
                              ReorderingStrategy, SkewAwareStrategy,
                              default_strategies)
@@ -641,7 +642,8 @@ def main(argv=None) -> int:
     catalog = generate(scale=args.scale, p=args.p, seed=args.seed)
     schema = catalog_schema(catalog)
     dtypes = catalog_dtypes(catalog)
-    queries = {**every_query(), **skewed_queries(), **filtered_queries()}
+    queries = {**every_query(), **skewed_queries(), **filtered_queries(),
+               **text_queries()}
     if args.queries:
         names = args.queries.split(",")
         unknown = [n for n in names if n not in queries]

@@ -40,6 +40,7 @@ from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
                       leaf_columns, leaf_retain_fraction)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, filter_cache_key)
+from .selectivity import derive_selectivity
 
 #: Static guess for an aggregate's group count as a fraction of input rows
 #: (used only when no runtime statistic exists yet; exchange boundaries
@@ -61,25 +62,38 @@ def catalog_base_stats(catalog: Catalog) -> Dict[str, TableStats]:
 
 
 def estimate_leaf_stats(node: Node, base_stats: Dict[str, TableStats],
-                        schema: Schema) -> TableStats:
-    """Statically propagate (size, cardinality) through a leaf subtree."""
+                        schema: Schema,
+                        key_domains: Optional[Dict[str, float]] = None
+                        ) -> TableStats:
+    """Statically propagate (size, cardinality) through a leaf subtree.
+
+    Filter selectivity is op-aware: a declared ``Filter.selectivity`` wins,
+    and underived filters (parsed SQL) get ``derive_selectivity``'s
+    schema-derived fraction — ``between``/``eq``/``in`` on columns with
+    known domains estimate their true kept fraction instead of a blanket
+    0.5. ``key_domains`` (e.g. ``Catalog.key_domains``) refines key-column
+    lookups; the static schema domains are the fallback."""
     if isinstance(node, Scan):
         return base_stats[node.table]
     if isinstance(node, Filter):
         return estimate_filter(
-            estimate_leaf_stats(node.child, base_stats, schema),
-            node.selectivity)
+            estimate_leaf_stats(node.child, base_stats, schema, key_domains),
+            derive_selectivity(node, key_domains))
     if isinstance(node, Project):
-        child = estimate_leaf_stats(node.child, base_stats, schema)
+        child = estimate_leaf_stats(node.child, base_stats, schema,
+                                    key_domains)
         n_child = max(len(leaf_columns(node.child, schema)), 1)
         return estimate_project(child, len(node.columns) / n_child)
     if isinstance(node, Aggregate):
-        child = estimate_leaf_stats(node.child, base_stats, schema)
+        child = estimate_leaf_stats(node.child, base_stats, schema,
+                                    key_domains)
         groups = max(child.cardinality * DEFAULT_GROUP_FRACTION, 1.0)
         return estimate_group_by(child, groups)
     if isinstance(node, Join):
-        left = estimate_leaf_stats(node.left, base_stats, schema)
-        right = estimate_leaf_stats(node.right, base_stats, schema)
+        left = estimate_leaf_stats(node.left, base_stats, schema,
+                                   key_domains)
+        right = estimate_leaf_stats(node.right, base_stats, schema,
+                                    key_domains)
         retain = leaf_retain_fraction(node.right)
         if node.join_type in (JoinType.LEFT_SEMI, JoinType.LEFT_ANTI):
             # Output keeps probe columns only; anti is the complement.

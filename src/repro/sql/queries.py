@@ -1,14 +1,22 @@
 """TPC-DS-shaped query suite (DESIGN.md §7).
 
-Each query is a logical plan over the synthetic star schema, engineered to
-cover the decision space the paper evaluates:
+Every query is **SQL text** (``SQL_TEXTS``), lowered through the text front
+end (``sql.parser`` -> ``sql.binder``) into a logical plan over the
+synthetic star schema. q1-q23 additionally keep their original hand-built
+plan constructors (``HAND_BUILT``) as a structural reference: the round-trip
+test pins ``signature(parse_sql(text)) == signature(hand_built())`` for each,
+so the front end can never silently drift from the plans the rest of the
+suite was engineered around. q24+ exist only as text — the front end is
+their sole producer.
+
+The suite covers the decision space the paper evaluates:
 
   * deep dimension chains (q72's 10-join shape) with tiny build sides,
   * joins whose build side is < Spark's 10MB absolute threshold but NOT
     relatively small (k < k0) — where AQE over-broadcasts (paper §5.4),
   * joins of aggregated intermediates (q39's shape, a ~ p),
-  * fact-to-large-dim joins (shuffle territory), semi/anti joins, and a
-    non-equi NL join.
+  * fact-to-large-dim joins (shuffle territory), semi/anti joins, outer
+    joins, and a non-equi NL join.
 
 Engine contract: probe side on the LEFT, unique-key build side on the RIGHT
 (Spark's BuildRight).
@@ -16,9 +24,10 @@ Engine contract: probe side on the LEFT, unique-key build side on the RIGHT
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Callable, Dict
 
 from ..core.selection import JoinType
+from .binder import parse_sql
 from .logical import Aggregate, Filter, Join, Node, Project, Scan
 
 
@@ -91,7 +100,7 @@ def q6_catalog_star() -> Node:
 def q7_filtered_fact() -> Node:
     """Hard-filtered fact x large dim: small absolute sizes but k ~ 1 —
     AQE broadcasts (under 10MB), RelJoin correctly shuffles (k < k0)."""
-    f = Filter(_ss(), "ss_quantity", "lt", 10, selectivity=0.09)
+    f = Filter(_ss(), "ss_quantity", "lt", 10, selectivity=9 / 99)
     j = Join(f, Scan("customer"), "ss_customer_sk", "c_customer_sk")
     return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
 
@@ -111,7 +120,7 @@ def q9_inventory_star() -> Node:
 
 def q10_promo_window() -> Node:
     j = Join(_ss(), Filter(Scan("date_dim"), "d_moy", "between", 10,
-                           value2=20, selectivity=0.36),
+                           value2=20, selectivity=11 / 30),
              "ss_sold_date_sk", "d_date_sk")
     j = Join(j, Scan("promotion"), "ss_promo_sk", "p_promo_sk")
     return Aggregate(j, "p_channel", (("ss_net_profit", "sum"),))
@@ -176,14 +185,6 @@ def q15_late_filter() -> Node:
     return Aggregate(f, "c_region", (("ss_sales_price", "sum"),))
 
 
-def misordered_queries() -> Dict[str, Node]:
-    return {
-        "q13_fact_fact_first": q13_fact_fact_first(),
-        "q14_big_dim_first": q14_big_dim_first(),
-        "q15_late_filter": q15_late_filter(),
-    }
-
-
 # ---------------------------------------------------------------------------
 # Skewed queries (skew-aware selection targets): each centers on a
 # fact x large-dim join in shuffle territory (k < k0) whose fact-side FK is
@@ -219,14 +220,6 @@ def q18_hot_catalog_customer() -> Node:
     j = Join(_cs(), Scan("date_dim"), "cs_ship_date_sk", "d_date_sk")
     j = Join(j, Scan("customer"), "cs_bill_customer_sk", "c_customer_sk")
     return Aggregate(j, "c_region", (("cs_sales_price", "sum"),))
-
-
-def skewed_queries() -> Dict[str, Node]:
-    return {
-        "q16_hot_customer": q16_hot_customer(),
-        "q17_hot_customer_star": q17_hot_customer_star(),
-        "q18_hot_catalog_customer": q18_hot_catalog_customer(),
-    }
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +281,9 @@ def q22_zone_map_window() -> Node:
     dimension's surviving keys form one band and the zone map is the
     cheapest reducer. The unfiltered customer shuffle runs *first* in plan
     order, so only the leaf-level zone map — pushed below that exchange —
-    can thin it to ~25% of the fact."""
+    can thin it to 25% of the fact (a 90-day window of the 360-day year)."""
     f = Filter(Scan("date_dim"), "d_date_sk", "lt", 90,
-               selectivity=90 / 365)
+               selectivity=90 / 360)
     j = Join(_ss(), Scan("customer"), "ss_customer_sk", "c_customer_sk")
     j = Join(j, f, "ss_sold_date_sk", "d_date_sk")
     return Aggregate(j, "c_region", (("ss_net_profit", "sum"),))
@@ -307,38 +300,345 @@ def q23_semi_join_stores() -> Node:
     return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
 
 
+#: q1-q23's hand-built constructors — the structural reference the SQL
+#: round-trip test pins against SQL_TEXTS.
+HAND_BUILT: Dict[str, Callable[[], Node]] = {
+    "q1_star3": q1_star3,
+    "q2_chain7": q2_chain7,
+    "q3_cross_channel": q3_cross_channel,
+    "q4_agg_agg": q4_agg_agg,
+    "q5_dim_chain_first": q5_dim_chain_first,
+    "q6_catalog_star": q6_catalog_star,
+    "q7_filtered_fact": q7_filtered_fact,
+    "q8_semi": q8_semi,
+    "q9_inventory_star": q9_inventory_star,
+    "q10_promo_window": q10_promo_window,
+    "q11_projected": q11_projected,
+    "q12_anti": q12_anti,
+    "q13_fact_fact_first": q13_fact_fact_first,
+    "q14_big_dim_first": q14_big_dim_first,
+    "q15_late_filter": q15_late_filter,
+    "q16_hot_customer": q16_hot_customer,
+    "q17_hot_customer_star": q17_hot_customer_star,
+    "q18_hot_catalog_customer": q18_hot_catalog_customer,
+    "q19_filtered_customer": q19_filtered_customer,
+    "q20_filter_below_earlier_exchange": q20_filter_below_earlier_exchange,
+    "q21_catalog_filtered_dates": q21_catalog_filtered_dates,
+    "q22_zone_map_window": q22_zone_map_window,
+    "q23_semi_join_stores": q23_semi_join_stores,
+}
+
+
+# ---------------------------------------------------------------------------
+# The SQL texts. These are the queries: every registry below lowers its
+# plans from this dict through parse_sql(). Filters written inside derived
+# tables sit on the leaf scans (the hand-built shapes); q15/q29 deliberately
+# leave predicates above the joins for the optimizer's pushdown to sink.
+# ---------------------------------------------------------------------------
+
+SQL_TEXTS: Dict[str, str] = {
+    "q1_star3": """
+        SELECT i_brand, SUM(ss_sales_price), SUM(ss_quantity)
+        FROM store_sales
+        JOIN (SELECT * FROM item WHERE i_category < 3)
+          ON ss_item_sk = i_item_sk
+        JOIN store ON ss_store_sk = s_store_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 6)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY i_brand
+    """,
+    "q2_chain7": """
+        SELECT i_category, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN date_dim ON ss_sold_date_sk = d_date_sk
+        JOIN item ON ss_item_sk = i_item_sk
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN household ON c_hdemo_sk = hd_demo_sk
+        JOIN promotion ON ss_promo_sk = p_promo_sk
+        JOIN store ON ss_store_sk = s_store_sk
+        GROUP BY i_category
+    """,
+    "q3_cross_channel": """
+        SELECT ss_store_sk, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN (SELECT cs_item_sk, SUM(cs_sales_price), COUNT(cs_quantity)
+              FROM catalog_sales GROUP BY cs_item_sk)
+          ON ss_item_sk = cs_item_sk
+        GROUP BY ss_store_sk
+    """,
+    "q4_agg_agg": """
+        SELECT *
+        FROM (SELECT inv_item_sk, AVG(inv_quantity_on_hand) FROM inventory
+              WHERE inv_date_sk < 180 GROUP BY inv_item_sk)
+        JOIN (SELECT inv_item_sk, AVG(inv_quantity_on_hand) FROM inventory
+              WHERE inv_date_sk >= 180 GROUP BY inv_item_sk)
+          ON inv_item_sk = inv_item_sk
+    """,
+    "q5_dim_chain_first": """
+        SELECT hd_buy_potential, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN (SELECT * FROM customer
+              JOIN household ON c_hdemo_sk = hd_demo_sk)
+          ON ss_customer_sk = c_customer_sk
+        GROUP BY hd_buy_potential
+    """,
+    "q6_catalog_star": """
+        SELECT w_state, SUM(cs_sales_price)
+        FROM catalog_sales
+        JOIN warehouse ON cs_warehouse_sk = w_warehouse_sk
+        JOIN (SELECT * FROM date_dim WHERE d_year = 2000)
+          ON cs_ship_date_sk = d_date_sk
+        JOIN item ON cs_item_sk = i_item_sk
+        GROUP BY w_state
+    """,
+    "q7_filtered_fact": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM (SELECT * FROM store_sales WHERE ss_quantity < 10)
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        GROUP BY c_region
+    """,
+    "q8_semi": """
+        SELECT * FROM customer
+        WHERE c_customer_sk IN (SELECT ss_customer_sk, COUNT(ss_quantity)
+                                FROM store_sales GROUP BY ss_customer_sk)
+    """,
+    "q9_inventory_star": """
+        SELECT i_category, SUM(inv_quantity_on_hand)
+        FROM inventory
+        JOIN item ON inv_item_sk = i_item_sk
+        JOIN warehouse ON inv_warehouse_sk = w_warehouse_sk
+        GROUP BY i_category
+    """,
+    "q10_promo_window": """
+        SELECT p_channel, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN (SELECT * FROM date_dim WHERE d_moy BETWEEN 10 AND 20)
+          ON ss_sold_date_sk = d_date_sk
+        JOIN promotion ON ss_promo_sk = p_promo_sk
+        GROUP BY p_channel
+    """,
+    "q11_projected": """
+        SELECT i_brand, SUM(ss_sales_price)
+        FROM (SELECT ss_item_sk, ss_customer_sk, ss_sales_price
+              FROM store_sales)
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN item ON ss_item_sk = i_item_sk
+        GROUP BY i_brand
+    """,
+    "q12_anti": """
+        SELECT * FROM item
+        WHERE i_item_sk NOT IN (SELECT cs_item_sk, COUNT(cs_quantity)
+                                FROM catalog_sales GROUP BY cs_item_sk)
+    """,
+    "q13_fact_fact_first": """
+        SELECT i_brand, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN (SELECT cs_item_sk, SUM(cs_sales_price) FROM catalog_sales
+              GROUP BY cs_item_sk)
+          ON ss_item_sk = cs_item_sk
+        JOIN (SELECT * FROM item WHERE i_category < 1)
+          ON ss_item_sk = i_item_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 3)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY i_brand
+    """,
+    "q14_big_dim_first": """
+        SELECT c_region, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN store ON ss_store_sk = s_store_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 6)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY c_region
+    """,
+    "q15_late_filter": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN item ON ss_item_sk = i_item_sk
+        WHERE i_category < 1
+        GROUP BY c_region
+    """,
+    "q16_hot_customer": """
+        SELECT c_region, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        GROUP BY c_region
+    """,
+    "q17_hot_customer_star": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN store ON ss_store_sk = s_store_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 6)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY c_region
+    """,
+    "q18_hot_catalog_customer": """
+        SELECT c_region, SUM(cs_sales_price)
+        FROM catalog_sales
+        JOIN date_dim ON cs_ship_date_sk = d_date_sk
+        JOIN customer ON cs_bill_customer_sk = c_customer_sk
+        GROUP BY c_region
+    """,
+    "q19_filtered_customer": """
+        SELECT c_region, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN (SELECT * FROM customer WHERE c_income < 74000)
+          ON ss_customer_sk = c_customer_sk
+        GROUP BY c_region
+    """,
+    "q20_filter_below_earlier_exchange": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN (SELECT * FROM item WHERE i_category < 1)
+          ON ss_item_sk = i_item_sk
+        GROUP BY c_region
+    """,
+    "q21_catalog_filtered_dates": """
+        SELECT c_region, SUM(cs_sales_price)
+        FROM catalog_sales
+        JOIN customer ON cs_bill_customer_sk = c_customer_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month BETWEEN 0 AND 2)
+          ON cs_ship_date_sk = d_date_sk
+        GROUP BY c_region
+    """,
+    "q22_zone_map_window": """
+        SELECT c_region, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN (SELECT * FROM date_dim WHERE d_date_sk < 90)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY c_region
+    """,
+    "q23_semi_join_stores": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN (SELECT * FROM store WHERE s_state = 0)
+          ON ss_store_sk = s_store_sk
+        GROUP BY c_region
+    """,
+    # -- text-only queries (q24+): no hand-built twin, the front end is
+    # -- their sole producer. Each widens the parsed surface: multi-
+    # -- conjunct WHEREs, IN lists, LEFT JOIN, semi/anti under aggregates,
+    # -- implicit comma joins, ne predicates, nested derived aggregates.
+    "q24_multi_predicate": """
+        SELECT s_state, SUM(ss_net_profit)
+        FROM (SELECT * FROM store_sales
+              WHERE ss_quantity < 50 AND ss_sales_price > 100)
+        JOIN store ON ss_store_sk = s_store_sk
+        GROUP BY s_state
+    """,
+    "q25_in_dims": """
+        SELECT i_brand, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN (SELECT * FROM item WHERE i_category IN (1, 3, 5))
+          ON ss_item_sk = i_item_sk
+        JOIN (SELECT * FROM date_dim WHERE d_month = 6)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY i_brand
+    """,
+    "q26_outer_agg": """
+        SELECT c_region, SUM(sum_ss_net_profit)
+        FROM customer
+        LEFT JOIN (SELECT ss_customer_sk, SUM(ss_net_profit)
+                   FROM store_sales GROUP BY ss_customer_sk)
+          ON c_customer_sk = ss_customer_sk
+        GROUP BY c_region
+    """,
+    "q27_semi_rich": """
+        SELECT c_region, COUNT(c_income)
+        FROM customer
+        WHERE c_income > 150000
+          AND c_customer_sk IN (SELECT cs_bill_customer_sk,
+                                       COUNT(cs_quantity)
+                                FROM catalog_sales
+                                GROUP BY cs_bill_customer_sk)
+        GROUP BY c_region
+    """,
+    "q28_anti_catalog": """
+        SELECT i_category, COUNT(i_price)
+        FROM item
+        WHERE i_item_sk NOT IN (SELECT cs_item_sk, COUNT(cs_quantity)
+                                FROM catalog_sales GROUP BY cs_item_sk)
+        GROUP BY i_category
+    """,
+    "q29_implicit_star": """
+        SELECT s_state, SUM(ss_sales_price)
+        FROM store_sales, store, date_dim
+        WHERE ss_store_sk = s_store_sk
+          AND ss_sold_date_sk = d_date_sk
+          AND d_month = 11
+        GROUP BY s_state
+    """,
+    "q30_zone_window": """
+        SELECT p_channel, SUM(ss_net_profit)
+        FROM store_sales
+        JOIN (SELECT * FROM date_dim WHERE d_date_sk BETWEEN 30 AND 59)
+          ON ss_sold_date_sk = d_date_sk
+        JOIN promotion ON ss_promo_sk = p_promo_sk
+        GROUP BY p_channel
+    """,
+    "q31_ne_store": """
+        SELECT s_state, COUNT(ss_quantity)
+        FROM store_sales
+        JOIN (SELECT * FROM store WHERE s_state <> 0)
+          ON ss_store_sk = s_store_sk
+        GROUP BY s_state
+    """,
+    "q32_inventory_turns": """
+        SELECT w_state, SUM(mean_inv_quantity_on_hand)
+        FROM (SELECT inv_warehouse_sk, AVG(inv_quantity_on_hand)
+              FROM inventory WHERE inv_date_sk BETWEEN 90 AND 179
+              GROUP BY inv_warehouse_sk)
+        JOIN warehouse ON inv_warehouse_sk = w_warehouse_sk
+        GROUP BY w_state
+    """,
+}
+
+
+def _from_sql(names) -> Dict[str, Node]:
+    return {name: parse_sql(SQL_TEXTS[name]) for name in names}
+
+
+def misordered_queries() -> Dict[str, Node]:
+    return _from_sql(["q13_fact_fact_first", "q14_big_dim_first",
+                      "q15_late_filter"])
+
+
+def skewed_queries() -> Dict[str, Node]:
+    return _from_sql(["q16_hot_customer", "q17_hot_customer_star",
+                      "q18_hot_catalog_customer"])
+
+
 def filtered_queries() -> Dict[str, Node]:
-    return {
-        "q19_filtered_customer": q19_filtered_customer(),
-        "q20_filter_below_earlier_exchange": q20_filter_below_earlier_exchange(),
-        "q21_catalog_filtered_dates": q21_catalog_filtered_dates(),
-        "q22_zone_map_window": q22_zone_map_window(),
-        "q23_semi_join_stores": q23_semi_join_stores(),
-    }
+    return _from_sql(["q19_filtered_customer",
+                      "q20_filter_below_earlier_exchange",
+                      "q21_catalog_filtered_dates",
+                      "q22_zone_map_window",
+                      "q23_semi_join_stores"])
+
+
+def text_queries() -> Dict[str, Node]:
+    """The text-only queries (q24+) — plans that exist solely as SQL."""
+    return _from_sql([n for n in SQL_TEXTS if n not in HAND_BUILT])
 
 
 def every_query() -> Dict[str, Node]:
     """The 12 baseline plans plus the 3 mis-ordered planner targets.
-    (The skewed q16-q18 and filter-friendly q19-q23 are separate: they
-    target specific catalogs/strategies — see ``skewed_queries()`` /
-    ``filtered_queries()`` and bench_skew / bench_filters.)"""
+    (The skewed q16-q18, filter-friendly q19-q23 and text-only q24+ are
+    separate: they target specific catalogs/strategies — see
+    ``skewed_queries()`` / ``filtered_queries()`` / ``text_queries()`` and
+    bench_skew / bench_filters.)"""
     out = all_queries()
     out.update(misordered_queries())
     return out
 
 
 def all_queries() -> Dict[str, Node]:
-    return {
-        "q1_star3": q1_star3(),
-        "q2_chain7": q2_chain7(),
-        "q3_cross_channel": q3_cross_channel(),
-        "q4_agg_agg": q4_agg_agg(),
-        "q5_dim_chain_first": q5_dim_chain_first(),
-        "q6_catalog_star": q6_catalog_star(),
-        "q7_filtered_fact": q7_filtered_fact(),
-        "q8_semi": q8_semi(),
-        "q9_inventory_star": q9_inventory_star(),
-        "q10_promo_window": q10_promo_window(),
-        "q11_projected": q11_projected(),
-        "q12_anti": q12_anti(),
-    }
+    return _from_sql(["q1_star3", "q2_chain7", "q3_cross_channel",
+                      "q4_agg_agg", "q5_dim_chain_first", "q6_catalog_star",
+                      "q7_filtered_fact", "q8_semi", "q9_inventory_star",
+                      "q10_promo_window", "q11_projected", "q12_anti"])

@@ -191,20 +191,23 @@ def probe_filter_mask(rf: RuntimeFilter, payload, keys: jax.Array
 def predicate_chain(leaf: Node) -> Optional[Tuple[str, tuple]]:
     """Normalized conjunctive predicate chain of a Scan-rooted leaf.
 
-    Returns ``(table, sorted (column, op, value, value2) specs)`` —
-    conjunctive filters commute, so sorting makes ``F1(F2(scan))`` and
+    Returns ``(table, sorted (column, op, value, value2, values) specs)``
+    — conjunctive filters commute, so sorting makes ``F1(F2(scan))`` and
     ``F2(F1(scan))`` identical, and projections are transparent (they
-    never change a column's values). Returns None for leaves not rooted
-    in a Scan (e.g. aggregated subqueries), whose surviving key set is
-    not determined by a predicate chain. This normalization is the
-    ground truth both for ``filter_cache_key`` and for the analyzer's
-    cache-reuse rule (a stored payload may only serve an edge whose
-    chain is a superset of the stored one)."""
+    never change a column's values). IN-list literals are part of the
+    spec (order-normalized, deduplicated): two different IN lists select
+    different key sets and must never share a cache entry. Returns None
+    for leaves not rooted in a Scan (e.g. aggregated subqueries), whose
+    surviving key set is not determined by a predicate chain. This
+    normalization is the ground truth both for ``filter_cache_key`` and
+    for the analyzer's cache-reuse rule (a stored payload may only serve
+    an edge whose chain is a superset of the stored one)."""
     preds = []
     node = leaf
     while True:
         base, filters = filter_chain(node)
-        preds.extend((f.column, f.op, float(f.value), float(f.value2))
+        preds.extend((f.column, f.op, float(f.value), float(f.value2),
+                      tuple(sorted(set(float(v) for v in f.values))))
                      for f in filters)
         if isinstance(base, Project):
             node = base.child

@@ -1,4 +1,4 @@
-"""Golden-plan snapshot tests: the physical-plan decisions of q1-q18 are
+"""Golden-plan snapshot tests: the physical-plan decisions of q1-q32 are
 pinned in a checked-in JSON fixture so cost-model / planner edits can't
 silently regress them.
 
@@ -29,13 +29,15 @@ import pathlib
 import pytest
 
 from repro.sql import (Executor, RelJoinStrategy, ReorderingStrategy,
-                       all_queries, default_strategies, misordered_queries,
-                       optimize, skewed_queries)
+                       all_queries, default_strategies, filtered_queries,
+                       misordered_queries, optimize, skewed_queries,
+                       text_queries)
 from repro.sql.logical import signature
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_plans.json"
 
-#: q1-q18: the full baseline + planner-target + skew-target suite.
+#: q1-q32: baseline + planner-target + skew-target + filter-target suites
+#: plus the text-only SQL queries (q24+).
 #: (Skewed queries run on the uniform catalog here: their *selection*
 #: snapshot is the uniform-key one; bench_skew owns the skewed behaviour.)
 
@@ -44,6 +46,8 @@ def golden_queries():
     out = dict(all_queries())
     out.update(misordered_queries())
     out.update(skewed_queries())
+    out.update(filtered_queries())
+    out.update(text_queries())
     return out
 
 
@@ -103,5 +107,5 @@ def test_golden_plans(snapshot):
         assert got["dp"] == exp["dp"], qname
 
 
-def test_snapshot_covers_q1_to_q18(snapshot):
-    assert len(snapshot["queries"]) == 18
+def test_snapshot_covers_q1_to_q32(snapshot):
+    assert len(snapshot["queries"]) == 32

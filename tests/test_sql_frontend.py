@@ -1,0 +1,294 @@
+"""SQL text front end: tokenizer/parser/binder units, the q1-q23 SQL
+round-trip pin (text and hand-built plans must stay signature-identical),
+signature literal regression, and the printer property test — random valid
+plans print to SQL, reparse to the same signature, and execute to the same
+rows.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
+from repro.sql import (Executor, RelJoinStrategy, generate, parse, parse_sql,
+                       to_sql, tokenize)
+from repro.sql.binder import SqlBindError
+from repro.sql.datagen import COLUMN_DOMAINS, TABLE_COLUMNS
+from repro.sql.logical import (Aggregate, Filter, Join, Scan,
+                               effective_selectivity, signature, walk)
+from repro.sql.parser import (AggCall, ColRef, ColumnEquals, Comparison,
+                              InList, InSubquery, SqlSyntaxError)
+from repro.sql.queries import HAND_BUILT, SQL_TEXTS, text_queries
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+
+def test_tokenize_kinds_and_positions():
+    toks = tokenize("SELECT x FROM t WHERE a <= -1.5e2")
+    kinds = [(t.kind, t.text) for t in toks]
+    assert ("symbol", "<=") in kinds
+    assert ("number", "-1.5e2") in kinds
+    assert kinds[-1] == ("eof", "")
+    assert toks[0].pos == 0 and toks[1].pos == 7
+
+
+def test_tokenize_rejects_unknown_characters():
+    with pytest.raises(SqlSyntaxError, match="unrecognized character"):
+        tokenize("SELECT @ FROM t")
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+
+def test_parse_select_items_and_group_by():
+    stmt = parse("SELECT k, SUM(v), AVG(w) FROM t GROUP BY k")
+    assert stmt.items == (ColRef("k"), AggCall("SUM", "v"),
+                          AggCall("AVG", "w"))
+    assert stmt.group_by == "k" and not stmt.star
+
+
+def test_parse_where_predicates():
+    stmt = parse("SELECT * FROM t WHERE a = 1 AND b BETWEEN 2 AND 3"
+                 " AND c IN (4, 5) AND t.d = u.e")
+    a, b, c, d = stmt.where
+    assert a == Comparison(ColRef("a"), "eq", 1.0)
+    assert b == Comparison(ColRef("b"), "between", 2.0, 3.0)
+    assert c == InList(ColRef("c"), (4.0, 5.0))
+    assert d == ColumnEquals(ColRef("d", "t"), ColRef("e", "u"))
+
+
+def test_parse_in_subquery_and_not_in():
+    stmt = parse("SELECT * FROM t WHERE a NOT IN (SELECT b FROM u)")
+    (pred,) = stmt.where
+    assert isinstance(pred, InSubquery) and pred.negated
+    assert pred.query.items == (ColRef("b"),)
+
+
+def test_parse_join_kinds_and_aliases():
+    stmt = parse("SELECT * FROM t AS x LEFT OUTER JOIN u y ON a = b JOIN"
+                 " (SELECT * FROM v) AS z ON c = d")
+    (tree,) = stmt.froms
+    assert tree.primary.alias == "x"
+    assert [j.kind for j in tree.joins] == ["left", "inner"]
+    assert tree.joins[1].ref.alias == "z"
+
+
+@pytest.mark.parametrize("bad, msg", [
+    ("SELECT * FROM t extra garbage ON", "trailing input"),
+    ("SELECT * FROM t WHERE a NOT = 1", "NOT is only supported"),
+    ("SELECT * FROM t WHERE a < b", "support only ="),
+    ("SELECT * FROM t WHERE a NOT IN (1, 2)", "only supported with a"),
+    ("SELECT FROM t", "expected a column name"),
+    ("SELECT * FROM t WHERE a BETWEEN 1", "expected AND"),
+])
+def test_parse_errors(bad, msg):
+    with pytest.raises(SqlSyntaxError, match=msg):
+        parse(bad)
+
+
+# ---------------------------------------------------------------------------
+# Binder
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad, msg", [
+    ("SELECT * FROM nope", "unknown table"),
+    ("SELECT nope FROM item", "unknown column"),
+    ("SELECT * FROM item WHERE nope = 1", "unknown column"),
+    ("SELECT SUM(i_price) FROM item", "requires GROUP BY"),
+    ("SELECT * FROM item, store", "unjoined"),
+    ("SELECT * FROM item WHERE i_item_sk = i_brand", "one relation"),
+    ("SELECT i_brand FROM item GROUP BY i_category",
+     "first select item must be the group key"),
+    ("SELECT i_category, i_brand FROM item GROUP BY i_category",
+     "must be aggregates"),
+    ("SELECT i_category FROM item GROUP BY i_category",
+     "at least one aggregate"),
+    ("SELECT * FROM item WHERE i_item_sk IN (SELECT * FROM store_sales)",
+     "first select item"),
+    ("SELECT * FROM store_sales, store_sales WHERE ss_quantity = 1",
+     "ambiguous column"),
+])
+def test_bind_errors(bad, msg):
+    with pytest.raises(SqlBindError, match=msg):
+        parse_sql(bad)
+
+
+def test_bind_qualified_columns_and_on_swap():
+    plan = parse_sql("SELECT * FROM store_sales"
+                     " JOIN item ON item.i_item_sk = store_sales.ss_item_sk")
+    assert isinstance(plan, Join)
+    # written build-first; the binder re-orients probe -> build
+    assert (plan.left_key, plan.right_key) == ("ss_item_sk", "i_item_sk")
+
+
+def test_bind_bakes_derived_selectivity():
+    plan = parse_sql("SELECT * FROM date_dim WHERE d_month = 6")
+    assert isinstance(plan, Filter)
+    assert plan.selectivity == pytest.approx(1 / 12)
+
+
+# ---------------------------------------------------------------------------
+# q1-q23 round-trip: the SQL texts and the hand-built constructors are the
+# same plans — same signature, same effective selectivities.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qname", sorted(HAND_BUILT))
+def test_sql_matches_hand_built(qname):
+    hand = HAND_BUILT[qname]()
+    parsed = parse_sql(SQL_TEXTS[qname])
+    assert signature(parsed) == signature(hand)
+    hand_sel = [effective_selectivity(f) for f in walk(hand)
+                if isinstance(f, Filter)]
+    parsed_sel = [effective_selectivity(f) for f in walk(parsed)
+                  if isinstance(f, Filter)]
+    assert parsed_sel == pytest.approx(hand_sel)
+
+
+def test_text_queries_are_the_sql_only_suite():
+    tq = text_queries()
+    assert len(tq) >= 8
+    assert set(tq) == set(SQL_TEXTS) - set(HAND_BUILT)
+    assert all(name not in HAND_BUILT for name in tq)
+
+
+# ---------------------------------------------------------------------------
+# Signature literal regression: plans differing only in a constant must not
+# collide (the pre-fix signature dropped filter literals entirely).
+# ---------------------------------------------------------------------------
+
+
+def test_signature_distinguishes_filter_literals():
+    base = Scan("item")
+    assert (signature(Filter(base, "i_category", "lt", 3))
+            != signature(Filter(base, "i_category", "lt", 4)))
+    assert (signature(Filter(base, "i_category", "between", 1, 3))
+            != signature(Filter(base, "i_category", "between", 1, 4)))
+    assert (signature(Filter(base, "i_category", "in", values=(1., 2.)))
+            != signature(Filter(base, "i_category", "in", values=(1., 3.))))
+    # and the op is still part of the tag
+    assert (signature(Filter(base, "i_category", "lt", 3))
+            != signature(Filter(base, "i_category", "le", 3)))
+
+
+# ---------------------------------------------------------------------------
+# Schema metadata guards: the static TABLE_COLUMNS / COLUMN_DOMAINS tables
+# the binder and selectivity estimator trust must match what generate()
+# actually builds.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_catalog():
+    return generate(scale=0.02, p=2, seed=7)
+
+
+def test_table_columns_match_generate(small_catalog):
+    got = {name: tuple(t.columns) for name, t in
+           small_catalog.tables.items()}
+    assert got == dict(TABLE_COLUMNS)
+
+
+def test_column_domains_bound_generated_data(small_catalog):
+    for col, (lo, hi, integral) in COLUMN_DOMAINS.items():
+        table = next(t for t, cols in TABLE_COLUMNS.items() if col in cols)
+        arr = np.asarray(small_catalog.tables[table].column(col))
+        valid = np.asarray(small_catalog.tables[table].valid)
+        vals = arr[valid]
+        assert vals.min() >= lo and vals.max() < hi, col
+        if integral:
+            assert np.all(vals == np.floor(vals)), col
+
+
+# ---------------------------------------------------------------------------
+# Printer property test: random valid plans -> SQL -> reparse gives the
+# same signature and the same executed rows on a small catalog.
+# ---------------------------------------------------------------------------
+
+_FACT_DIMS = [("ss_item_sk", "item", "i_item_sk"),
+              ("ss_store_sk", "store", "s_store_sk"),
+              ("ss_customer_sk", "customer", "c_customer_sk"),
+              ("ss_sold_date_sk", "date_dim", "d_date_sk"),
+              ("ss_promo_sk", "promotion", "p_promo_sk")]
+_FILTER_COLS = {"store_sales": ("ss_quantity", 1, 100),
+                "item": ("i_category", 0, 10),
+                "store": ("s_state", 0, 12),
+                "customer": ("c_region", 0, 8),
+                "date_dim": ("d_moy", 0, 30),
+                "promotion": ("p_channel", 0, 4)}
+_GROUP_KEYS = {"store_sales": "ss_quantity", "item": "i_brand",
+               "store": "s_state", "customer": "c_region",
+               "date_dim": "d_month", "promotion": "p_channel"}
+_AGG_COLS = ("ss_sales_price", "ss_net_profit", "ss_quantity")
+_OPS = ("eq", "ne", "lt", "le", "gt", "ge", "between", "in")
+
+_prop_catalog = None
+
+
+def _property_catalog():
+    global _prop_catalog
+    if _prop_catalog is None:
+        _prop_catalog = generate(scale=0.02, p=2, seed=7)
+    return _prop_catalog
+
+
+def _random_leaf(table, rng):
+    node = Scan(table)
+    if rng.random() < 0.6:
+        col, lo, hi = _FILTER_COLS[table]
+        op = rng.choice(_OPS)
+        if op == "between":
+            a, b = sorted((rng.randint(lo, hi - 1), rng.randint(lo, hi - 1)))
+            node = Filter(node, col, "between", a, b)
+        elif op == "in":
+            vals = tuple(sorted(rng.sample(range(lo, hi),
+                                           rng.randint(1, 3))))
+            node = Filter(node, col, "in", values=vals)
+        else:
+            node = Filter(node, col, op, rng.randint(lo, hi - 1))
+    return node
+
+
+def _random_plan(rng):
+    dims = rng.sample(_FACT_DIMS, rng.randint(0, 2))
+    node = _random_leaf("store_sales", rng)
+    for fk, dim, pk in dims:
+        node = Join(node, _random_leaf(dim, rng), fk, pk)
+    if rng.random() < 0.7:
+        key = _GROUP_KEYS[rng.choice(["store_sales"]
+                                     + [d[1] for d in dims])]
+        agg_op = rng.choice(("sum", "count", "min", "max", "mean"))
+        node = Aggregate(node, key, ((rng.choice(_AGG_COLS), agg_op),))
+    return node
+
+
+def _rows(result):
+    # to_numpy() already drops invalid slots; only row order could differ,
+    # and identical plans execute deterministically.
+    return {c: np.asarray(a) for c, a in result.table.to_numpy().items()}
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_print_reparse_preserves_signature_and_result(seed):
+    rng = random.Random(seed)
+    plan = _random_plan(rng)
+    reparsed = parse_sql(to_sql(plan))
+    assert signature(reparsed) == signature(plan)
+
+    catalog = _property_catalog()
+    r1 = Executor(catalog, RelJoinStrategy()).execute(plan)
+    r2 = Executor(catalog, RelJoinStrategy()).execute(reparsed)
+    rows1, rows2 = _rows(r1), _rows(r2)
+    assert rows1.keys() == rows2.keys()
+    for col in rows1:
+        np.testing.assert_allclose(rows1[col], rows2[col], rtol=1e-6,
+                                   err_msg=col)
