@@ -1,0 +1,107 @@
+"""Concurrent query service benchmark: aggregate throughput of the batched
+multi-tenant path vs serial solo execution on the service suite (q19-q23
+plus the deliberately-overlapping q33/q34).
+
+Headline metrics:
+  * aggregate queries/sec — batch wall time vs the summed solo wall times,
+  * total suite network bytes — every shared subtree's single producer
+    execution plus every consumer, vs the serial sum; shared subtrees and
+    the batch-wide FilterCache make this strictly lower.
+
+Claim checks: every deduped subtree has >= 2 occurrences and exactly one
+producer execution, per-query batched rows identical to solo (up to float
+summation order), batched suite bytes strictly below serial, and a warm
+resubmission of the whole suite hits the plan cache on every query.
+
+Wall-clock ordering note: the serial pass runs first, so JIT compilation
+of the shared join shapes lands on the serial side's first executions and
+the batch pass runs against a warm compile cache — the wall-clock ratio
+is therefore a friendly upper bound on this 1-core container, while the
+byte metrics are exact and scheduler-independent.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.joins.ref import rows_as_set, rows_close
+from repro.sql import QueryService, generate, service_queries
+
+from .common import emit
+
+
+def run(scale: float = 0.2, p: int = 8):
+    catalog = generate(scale=scale, p=p, seed=0)
+    queries = service_queries()
+    service = QueryService(catalog)
+
+    # -- serial baseline: each query alone, cold caches -----------------------
+    solos = {}
+    t0 = time.perf_counter()
+    for qname, plan in queries.items():
+        solos[qname] = service.execute_solo(plan)
+    serial_wall = time.perf_counter() - t0
+    serial_bytes = sum(r.network_bytes for r in solos.values())
+    serial_joins = sum(len(r.decisions) for r in solos.values())
+
+    # -- batched pass ---------------------------------------------------------
+    for qname, plan in queries.items():
+        service.submit(plan, name=qname)
+    reports = service.run()
+    assert len(reports) == 1
+    report = reports[0]
+    batch_bytes = report.total_network_bytes
+    batch_joins = (sum(len(s.result.decisions) for s in report.shared)
+                   + sum(len(r.decisions) for r in report.results.values()))
+
+    all_same = True
+    for qname in queries:
+        solo, batched = solos[qname], report.results[qname]
+        same = rows_close(rows_as_set(batched.table.to_numpy()),
+                          rows_as_set(solo.table.to_numpy()))
+        all_same &= same
+        emit(f"service/measured/{qname}", batched.wall_time_s * 1e6,
+             f"net_KB={solo.network_bytes / 1024:.1f}"
+             f"->{batched.network_bytes / 1024:.1f};"
+             f"joins={len(solo.decisions)}->{len(batched.decisions)};"
+             f"cached_filters={batched.cached_filters};same={int(same)}")
+    # Row name = consumer list (stable + CSV-safe; raw signatures carry
+    # commas/brackets that would corrupt the emitted CSV metric names).
+    for s in report.shared:
+        emit(f"service/shared/{'+'.join(s.consumers)}",
+             s.result.wall_time_s * 1e6,
+             f"occurrences={s.occurrences};"
+             f"net_KB={s.result.network_bytes / 1024:.1f};"
+             f"rows={s.result.rows}")
+
+    # -- headline metrics -----------------------------------------------------
+    serial_qps = len(queries) / max(serial_wall, 1e-9)
+    emit("service/throughput", report.wall_time_s * 1e6,
+         f"qps={report.queries_per_second:.2f};serial_qps={serial_qps:.2f};"
+         f"x={report.queries_per_second / max(serial_qps, 1e-9):.2f}")
+    emit("service/claim/suite_bytes", 0.0,
+         f"KB={serial_bytes / 1024:.1f}->{batch_bytes / 1024:.1f};"
+         f"x={serial_bytes / max(batch_bytes, 1.0):.2f};"
+         f"below_serial={int(batch_bytes < serial_bytes)};expect=1")
+    dedup_ok = (bool(report.shared)
+                and all(s.occurrences >= 2 for s in report.shared)
+                and batch_joins < serial_joins)
+    emit("service/claim/shared_dedup", 0.0,
+         f"shared={len(report.shared)};joins={serial_joins}->{batch_joins};"
+         f"ok={int(dedup_ok)};expect=1")
+    emit("service/claim/rows_identical", 0.0,
+         f"ok={int(all_same)};expect=1")
+
+    # -- warm plan cache: resubmit the whole suite ----------------------------
+    warm = [service.submit(plan, name=f"warm_{qname}")
+            for qname, plan in queries.items()]
+    service.run()
+    warm_hits = sum(1 for sub in warm if sub.plan_cached)
+    emit("service/claim/plan_cache_warm", 0.0,
+         f"cached={warm_hits}/{len(warm)};"
+         f"ok={int(warm_hits == len(warm))};expect=1")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -55,7 +55,8 @@ def _registry():
     relative to any single benchmark run.)"""
     from . import (bench_accuracy, bench_cost_model, bench_filters,
                    bench_kernels, bench_psts, bench_reorder, bench_roofline,
-                   bench_skew, bench_strategies, bench_w_sweep)
+                   bench_service, bench_skew, bench_strategies,
+                   bench_w_sweep)
 
     s = SMOKE_SCALE
     return {
@@ -77,6 +78,8 @@ def _registry():
                  {"scale": 0.2, "zipfs": (0.0, 1.2)},
                  {"scale": s, "zipfs": (0.0, 1.2)}),
         "filters": (bench_filters, {"scale": 0.2}, {"scale": 0.2},
+                    {"scale": s}),
+        "service": (bench_service, {"scale": 0.2}, {"scale": 0.1},
                     {"scale": s}),
         "roofline": (bench_roofline, {}, {}, {}),
     }
@@ -101,24 +104,29 @@ def _load_artifacts(path: pathlib.Path) -> dict:
 
 def _tracked_metrics(artifacts: dict) -> dict:
     """Flatten artifacts into ``metric-name -> value`` for comparison:
-    per-benchmark wall seconds plus every timed row (``us_per_call`` > 0;
-    zero marks derived-metric rows, which carry no timing to regress)."""
+    per-benchmark wall seconds plus every row's ``us_per_call`` — zero
+    rows (derived metrics, warm-cache passes) included, so a baseline
+    that was 0 still has teeth via the absolute-delta fallback."""
     metrics = {}
     for bench, payload in artifacts.items():
         metrics[f"{bench}:seconds"] = float(payload["seconds"])
         for row in payload.get("rows", []):
-            us = float(row.get("us_per_call", 0.0))
-            if us > 0:
-                metrics[f"{bench}/{row['name']}:us_per_call"] = us
+            metrics[f"{bench}/{row['name']}:us_per_call"] = float(
+                row.get("us_per_call", 0.0))
     return metrics
 
 
 def compare_artifacts(old_path: str, new_path: str,
-                      threshold: float = 0.10) -> list:
+                      threshold: float = 0.10,
+                      abs_threshold: float = 100.0) -> list:
     """Regressions of ``new`` vs ``old``: tracked metrics that grew by
     more than ``threshold`` (fraction), plus tracked metrics that vanished
-    (a silently dropped benchmark is a regression, not a win). Returns a
-    list of human-readable offense lines, empty when clean."""
+    (a silently dropped benchmark is a regression, not a win). A
+    zero-valued baseline has no ratio to regress against — dividing by it
+    (or guarding on ``old > 0`` alone) would let any blowup through
+    silently — so those metrics fall back to an absolute gate: new value
+    beyond ``abs_threshold`` (same unit as the metric) is an offense.
+    Returns a list of human-readable offense lines, empty when clean."""
     old = _tracked_metrics(_load_artifacts(pathlib.Path(old_path)))
     new = _tracked_metrics(_load_artifacts(pathlib.Path(new_path)))
     offenses = []
@@ -128,10 +136,15 @@ def compare_artifacts(old_path: str, new_path: str,
                             f"(was {old_val:g})")
             continue
         new_val = new[name]
-        if old_val > 0 and new_val > old_val * (1 + threshold):
-            pct = 100.0 * (new_val / old_val - 1)
+        if old_val > 0:
+            if new_val > old_val * (1 + threshold):
+                pct = 100.0 * (new_val / old_val - 1)
+                offenses.append(f"{name}: {old_val:g} -> {new_val:g} "
+                                f"(+{pct:.1f}% > {100 * threshold:.0f}%)")
+        elif new_val > abs_threshold:
             offenses.append(f"{name}: {old_val:g} -> {new_val:g} "
-                            f"(+{pct:.1f}% > {100 * threshold:.0f}%)")
+                            f"(zero baseline; exceeds absolute "
+                            f"threshold {abs_threshold:g})")
     return offenses
 
 
@@ -156,10 +169,13 @@ def main(argv=None) -> None:
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="--compare regression threshold as a fraction "
                          "(default 0.10 = 10%%)")
+    ap.add_argument("--abs-threshold", type=float, default=100.0,
+                    help="--compare absolute fallback gate for metrics "
+                         "whose baseline is 0 (default 100, metric units)")
     args = ap.parse_args(argv)
     if args.compare:
         offenses = compare_artifacts(args.compare[0], args.compare[1],
-                                     args.threshold)
+                                     args.threshold, args.abs_threshold)
         for line in offenses:
             print(f"REGRESSION {line}")
         if offenses:

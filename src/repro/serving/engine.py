@@ -11,8 +11,9 @@ boundary.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +42,10 @@ class ServeEngine:
         self.mesh_axes, self.shape = mesh_axes, shape
         self.cache = lm.init_cache(cfg, max_batch, max_seq)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: List[Request] = []
+        # FIFO admission queue. A deque: admission pops from the head on
+        # every step, and list.pop(0) is O(n) per admit — quadratic drain
+        # under deep backlogs (the serving regime this engine exists for).
+        self.queue: Deque[Request] = collections.deque()
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, cfg, plan, mesh, t, c))
         self.replan_events: List[str] = []
@@ -54,7 +58,7 @@ class ServeEngine:
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slots[i] = req
                 # teacher-force the prompt through decode steps for slot i
                 # (per-slot prefill; batched prefill is the prefill_* path)

@@ -5,27 +5,32 @@ pruning / System-R join reordering), and the adaptive stage-wise
 executor."""
 
 from .binder import SqlBindError, bind, parse_sql
-from .datagen import Catalog, generate
+from .datagen import Catalog, catalog_fingerprint, generate
 from .executor import ExecutionResult, Executor, FilterDecision, JoinDecision
 from .logical import (Aggregate, Distribution, Filter, Join, JoinEdge,
                       JoinGraph, Node, Project, RuntimeFilter, Scan,
                       effective_selectivity, extract_join_graph,
-                      infer_distribution, walk_paths)
+                      infer_distribution, shared_subtree_candidates,
+                      signature, subtree_size, walk_paths)
 from .parser import SqlSyntaxError, parse, tokenize
 from .plan_analysis import (RULES, PlanVerificationError, Rule, Violation,
                             analyze_plan, audit_join_decision,
                             verify_execution)
-from .planner import (OptimizedPlan, enumerate_join_order, modeled_tree_cost,
-                      optimize, plan_runtime_filters, prune_projections,
+from .planner import (OptimizedPlan, PlanCache, enumerate_join_order,
+                      modeled_plan_cost, modeled_tree_cost, optimize,
+                      plan_runtime_filters, prune_projections,
                       push_down_filters)
 from .printer import to_sql
 from .queries import (all_queries, every_query, filtered_queries,
-                      misordered_queries, skewed_queries, text_queries)
+                      misordered_queries, service_queries, skewed_queries,
+                      text_queries)
 from .selectivity import derive_selectivity
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, FilterQuote, RuntimeFilterKind,
                               build_filter_payload, filter_cache_key,
                               probe_filter_mask)
+from .service import (ADMISSION_POLICIES, AdmissionController, BatchReport,
+                      QueryService, SharedSubtree, Submission)
 from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
                          RelJoinStrategy, ReorderingStrategy,
                          SkewAwareStrategy, Strategy, default_strategies)
@@ -33,20 +38,27 @@ from .strategies import (AQEStrategy, FilteredStrategy, ForcedStrategy,
 __all__ = ["SqlBindError", "bind", "parse_sql", "SqlSyntaxError", "parse",
            "tokenize", "to_sql", "derive_selectivity",
            "effective_selectivity", "text_queries",
-           "Catalog", "generate", "ExecutionResult", "Executor",
+           "Catalog", "catalog_fingerprint", "generate", "ExecutionResult",
+           "Executor",
            "FilterDecision", "JoinDecision", "Aggregate", "Distribution",
            "Filter", "Join",
            "JoinEdge", "JoinGraph", "Node", "Project", "RuntimeFilter",
-           "Scan", "extract_join_graph", "infer_distribution", "walk_paths",
+           "Scan", "extract_join_graph", "infer_distribution",
+           "shared_subtree_candidates", "signature", "subtree_size",
+           "walk_paths",
            "RULES", "PlanVerificationError", "Rule", "Violation",
            "analyze_plan", "audit_join_decision", "verify_execution",
-           "OptimizedPlan",
-           "enumerate_join_order", "modeled_tree_cost", "optimize",
+           "OptimizedPlan", "PlanCache",
+           "enumerate_join_order", "modeled_plan_cost", "modeled_tree_cost",
+           "optimize",
            "plan_runtime_filters", "prune_projections", "push_down_filters",
            "all_queries", "every_query", "filtered_queries",
-           "misordered_queries", "skewed_queries", "DEFAULT_FILTER_KINDS",
+           "misordered_queries", "service_queries", "skewed_queries",
+           "DEFAULT_FILTER_KINDS",
            "FILTER_KINDS", "FilterCache", "FilterQuote", "RuntimeFilterKind",
            "build_filter_payload", "filter_cache_key", "probe_filter_mask",
+           "ADMISSION_POLICIES", "AdmissionController", "BatchReport",
+           "QueryService", "SharedSubtree", "Submission",
            "AQEStrategy",
            "FilteredStrategy", "ForcedStrategy", "RelJoinStrategy",
            "ReorderingStrategy", "SkewAwareStrategy", "Strategy",

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict
+import uuid
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -28,10 +29,15 @@ class Catalog:
 
     ``version`` identifies the catalog *contents*: every constructed
     Catalog (each ``generate`` call included) gets a fresh monotonically
-    increasing value, and the cross-query ``FilterCache`` keys its
-    validity on it — payloads cached against one version are invalidated
-    when an executor runs against another. Data changes must therefore go
-    through a new Catalog object, never by mutating ``tables`` in place.
+    increasing value. ``uid`` is the catalog's *identity fingerprint* — a
+    generation UUID minted per constructed Catalog. The cross-query caches
+    (``FilterCache``, ``PlanCache``) key their validity on
+    :func:`catalog_fingerprint`, i.e. on ``(version, uid)``: the version
+    alone is only process-unique by convention, and two Catalogs built
+    with an explicitly-passed (or persisted-and-reloaded) version number
+    would otherwise falsely reuse each other's payloads — wrong rows, not
+    just a stale-cost miss. Data changes must go through a new Catalog
+    object, never by mutating ``tables`` in place.
     """
 
     tables: Dict[str, Table]
@@ -39,6 +45,8 @@ class Catalog:
     key_domains: Dict[str, float] = dataclasses.field(default_factory=dict)
     version: int = dataclasses.field(
         default_factory=lambda: next(_CATALOG_VERSIONS))
+    uid: str = dataclasses.field(
+        default_factory=lambda: uuid.uuid4().hex)
 
     def table(self, name: str) -> Table:
         return self.tables[name]
@@ -46,6 +54,18 @@ class Catalog:
 
 #: Source of ``Catalog.version`` values (process-unique, monotonic).
 _CATALOG_VERSIONS = itertools.count()
+
+
+def catalog_fingerprint(catalog) -> Tuple[object, object]:
+    """Cache-validity identity of a catalog: ``(version, uid)``.
+
+    Both components must match for a cached payload to be reusable —
+    ``version`` tracks declared content generations, ``uid`` pins the
+    concrete Catalog instance lineage so version-number collisions across
+    independently built catalogs can never alias cache entries. Tolerates
+    catalog-like objects without the fields (None components) so caches
+    degrade to always-invalidate rather than crash."""
+    return (getattr(catalog, "version", None), getattr(catalog, "uid", None))
 
 
 #: (rows per unit scale, payload float columns) per table. Dimensions are

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
@@ -35,7 +35,7 @@ from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
                       RuntimeFilter, Scan, augment_edges,
                       effective_selectivity, extract_join_graph,
-                      key_retain_fraction, leaf_retain_fraction)
+                      key_retain_fraction, leaf_retain_fraction, signature)
 from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
                             audit_exchanges, audit_filter_decision,
                             audit_selection, catalog_dtypes, check_cache_reuse,
@@ -211,7 +211,8 @@ class Executor:
                  adaptive: bool = True, est_error: float = 1.0,
                  use_kernel: bool = False, capacity_factor: float = 2.0,
                  compact: bool = True, reorder: Optional[bool] = None,
-                 verify: Optional[bool] = None):
+                 verify: Optional[bool] = None,
+                 intermediates: Optional[Dict[str, Table]] = None):
         self.catalog = catalog
         self.strategy = strategy
         self.adaptive = adaptive
@@ -248,6 +249,11 @@ class Executor:
         # before/while executing; violations raise PlanVerificationError.
         self.verify = (getattr(strategy, "verify", False)
                        if verify is None else verify)
+        # Cross-query CSE injection (QueryService): pre-computed tables for
+        # shared exchange-rooted subtrees, keyed on ``logical.signature``.
+        # ``_eval`` returns them in place of re-executing the subtree.
+        self.intermediates: Dict[str, Table] = (
+            dict(intermediates) if intermediates else {})
         self._schema = catalog_schema(catalog)
         self._params = CostParams(p=self.p, w=getattr(strategy, "w", 1.0))
         # Key-domain denominators for the filter planner's sigma estimate.
@@ -294,6 +300,18 @@ class Executor:
     # -- evaluation ------------------------------------------------------------
 
     def _eval(self, node: Node) -> _Annotated:
+        if self.intermediates and isinstance(node, (Join, Aggregate)):
+            # Cross-query CSE: a shared exchange-rooted subtree another
+            # query (or an earlier producer pass) already materialized is
+            # consumed directly — no joins run, no bytes move. Tables are
+            # immutable (every operator derives a new one), so fanning one
+            # table out to many consumers is safe. Measured stats stand in
+            # for both channels: the subtree root is an exchange boundary,
+            # where adaptive execution would re-measure anyway.
+            shared = self.intermediates.get(signature(node))
+            if shared is not None:
+                measured = shared.measure()
+                return _Annotated(shared, measured, measured)
         if isinstance(node, Scan):
             t = self.catalog.table(node.table)
             measured = t.measure()

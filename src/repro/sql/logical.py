@@ -109,10 +109,12 @@ def filter_literal(f: Filter) -> str:
 def signature(plan: Node) -> str:
     """Canonical one-line structural signature of a logical plan. Captures
     join order, join keys/types, filter predicates *including their
-    literals* and operator nesting — what the golden-plan snapshots pin so
-    optimizer edits can't silently reorder a plan. (Literals matter: two
-    plans differing only in a constant are different plans, and
-    signature-keyed consumers must never collide them.)"""
+    literals*, aggregate specs, and operator nesting — what the golden-plan
+    snapshots pin so optimizer edits can't silently reorder a plan.
+    (Literals and agg specs matter: two plans differing only in a constant
+    or in which column they sum are different plans, and signature-keyed
+    consumers — the plan cache, cross-query CSE — must never collide
+    them.)"""
     if isinstance(plan, Scan):
         return plan.table
     if isinstance(plan, Filter):
@@ -121,7 +123,8 @@ def signature(plan: Node) -> str:
     if isinstance(plan, Project):
         return f"project[{','.join(plan.columns)}]({signature(plan.child)})"
     if isinstance(plan, Aggregate):
-        return f"agg[{plan.key}]({signature(plan.child)})"
+        specs = ",".join(f"{op}:{col}" for col, op in plan.aggs)
+        return f"agg[{plan.key};{specs}]({signature(plan.child)})"
     if isinstance(plan, Join):
         tag = f"{plan.left_key}={plan.right_key}"
         if plan.join_type is not JoinType.INNER:
@@ -457,6 +460,49 @@ def extract_join_graph(root: Node, schema: Schema) -> Optional[JoinGraph]:
     if len(frozenset().union(*cols)) != total:  # cross-leaf name collision
         return None
     return JoinGraph(leaves, edges, tree)
+
+
+def subtree_size(plan: Node) -> int:
+    """Operator count of a subtree — the size order cross-query CSE uses
+    to execute nested shared subtrees before the subtrees containing them."""
+    return 1 + sum(subtree_size(c) for c in plan.children())
+
+
+def shared_subtree_candidates(plan: Node):
+    """Enumerate the subtree occurrences cross-query CSE may dedupe, as
+    ``(signature, node)`` pairs (one pair per occurrence — a signature
+    appearing twice in one plan yields two pairs).
+
+    A candidate must be *worth sharing* and *safe to share*:
+
+      * **Exchange-rooted** (Join or Aggregate): only subtrees containing
+        at least one exchange save network bytes when deduped; scans and
+        filter chains are free to re-evaluate.
+      * **Region-atomic**: solo execution must evaluate the occurrence as
+        a unit for an injected result to be byte-identical. The executor
+        flattens maximal hint-free INNER-join regions for reordering and
+        leaf-level filter placement (``extract_join_graph``), so an inner
+        hint-free join nested *directly under* another inner hint-free
+        join is not a unit — it dissolves into its parent's region and
+        would be re-ordered/filtered across its own boundary. Every other
+        position (under a Filter/Project/Aggregate, under a hinted or
+        non-inner join, or at the root) is a region leaf or a region root,
+        which the executor evaluates via a single ``_eval`` call.
+
+    Exclusion is conservative: a non-atomic occurrence is merely not
+    shared, never shared wrongly.
+    """
+
+    def go(node: Node, parent: Optional[Node]):
+        if isinstance(node, (Join, Aggregate)):
+            dissolves = (_is_region_join(node) and parent is not None
+                         and _is_region_join(parent))
+            if not dissolves:
+                yield signature(node), node
+        for child in node.children():
+            yield from go(child, node)
+
+    yield from go(plan, None)
 
 
 def key_equivalence_classes(graph: JoinGraph):

@@ -33,11 +33,11 @@ from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
 from ..core.selection import JoinProperties, JoinType, select_join_method
 from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
                           estimate_join, estimate_project)
-from .datagen import Catalog
+from .datagen import Catalog, catalog_fingerprint
 from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
                       RuntimeFilter, Scan, Schema, augment_edges,
                       extract_join_graph, filter_chain, key_band_fraction,
-                      leaf_columns, leaf_retain_fraction)
+                      leaf_columns, leaf_retain_fraction, signature)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, filter_cache_key)
 from .selectivity import derive_selectivity
@@ -515,6 +515,85 @@ class OptimizedPlan:
         return any(r.reordered for r in self.regions)
 
 
+class PlanCache:
+    """Cross-query compiled-plan cache, mirroring ``FilterCache``'s key
+    discipline.
+
+    Entries are keyed on ``logical.signature(plan)`` plus every
+    ``optimize()`` knob that changes the emitted plan (pushdown / prune /
+    reorder / bushy / min_region and the cost parameters ``p`` / ``w``),
+    and the whole cache is bound to one catalog identity fingerprint
+    (version + generation uid) via ``sync`` — a catalog change invalidates
+    everything, exactly like ``FilterCache.sync``. A warm hit returns the
+    stored ``OptimizedPlan`` and skips the rewrite + DP work entirely;
+    ``signature()`` covers filter literals and aggregate specs, so two
+    queries share an entry only when their logical plans are identical.
+    """
+
+    def __init__(self) -> None:
+        self._entries: Dict[tuple, OptimizedPlan] = {}
+        self._catalog_fingerprint: Optional[tuple] = None
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def sync(self, catalog: Catalog) -> None:
+        """Bind the cache to ``catalog``; drop every entry if it is not
+        the catalog the current plans were optimized against."""
+        fingerprint = catalog_fingerprint(catalog)
+        if fingerprint != self._catalog_fingerprint:
+            if self._entries:
+                self.invalidations += 1
+            self._entries.clear()
+            self._catalog_fingerprint = fingerprint
+
+    @staticmethod
+    def key(plan: Node, params: CostParams, *, pushdown: bool, prune: bool,
+            reorder: bool, bushy: bool, min_region: int) -> tuple:
+        return (signature(plan), pushdown, prune, reorder, bushy,
+                min_region, params.p, params.w)
+
+    def lookup(self, key: tuple) -> Optional[OptimizedPlan]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def store(self, key: tuple, optimized: OptimizedPlan) -> None:
+        self._entries[key] = optimized
+
+
+def modeled_plan_cost(plan: Node, base_stats: Dict[str, TableStats],
+                      schema: Schema, params: CostParams,
+                      key_domains: Optional[Dict[str, float]] = None
+                      ) -> float:
+    """Modeled workload of a whole plan: the Eq. 4/8/10 sum of Algorithm 1's
+    best feasible method over every join, with statistics statically
+    propagated by ``estimate_leaf_stats``. This is the admission
+    controller's cost quote — a dimensionless relative workload comparable
+    across queries against the same catalog, not a latency prediction."""
+    total = 0.0
+    for node in (plan, *_descendants(plan)):
+        if isinstance(node, Join):
+            probe = estimate_leaf_stats(node.left, base_stats, schema,
+                                        key_domains)
+            build = estimate_leaf_stats(node.right, base_stats, schema,
+                                        key_domains)
+            total += _step(probe, build, params)[1]
+    return total
+
+
+def _descendants(node: Node):
+    for child in node.children():
+        yield child
+        yield from _descendants(child)
+
+
 def build_join_tree(tree, leaves: List[Node]) -> Node:
     """Materialize a DP order tree back into logical Join nodes. A node is
     a leaf index or ``(left_tree, right_tree, probe_key, build_key)`` —
@@ -532,7 +611,8 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
              params: Optional[CostParams] = None,
              pushdown: bool = True, prune: bool = True,
              reorder: bool = True, bushy: bool = False,
-             min_region: int = 3, verify: bool = False) -> OptimizedPlan:
+             min_region: int = 3, verify: bool = False,
+             plan_cache: Optional[PlanCache] = None) -> OptimizedPlan:
     """Full logical optimization pass.
 
     Statistics come from ``catalog`` (exact base stats) unless ``base_stats``
@@ -544,6 +624,12 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
     statically analyzed, and the rewritten plan must pass the same
     analysis *and* preserve the output schema (rule P2) — any violation
     raises ``PlanVerificationError``.
+
+    ``plan_cache`` (used only when ``catalog`` is given, since the cache
+    binds to a catalog fingerprint) short-circuits the whole pass on a
+    warm hit: the cache is synced to the catalog, keyed on the input
+    plan's signature + every rewrite knob, and a stored ``OptimizedPlan``
+    is returned as-is. Misses run the normal pass and store the result.
     """
     if schema is None:
         if catalog is None:
@@ -554,6 +640,15 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
         base_stats = catalog_base_stats(catalog) if catalog else {}
     if params is None:
         params = CostParams(p=catalog.p if catalog else 8, w=1.0)
+    cache_key = None
+    if plan_cache is not None and catalog is not None:
+        plan_cache.sync(catalog)
+        cache_key = PlanCache.key(plan, params, pushdown=pushdown,
+                                  prune=prune, reorder=reorder, bushy=bushy,
+                                  min_region=min_region)
+        cached = plan_cache.lookup(cache_key)
+        if cached is not None:
+            return cached
     original = plan
     if verify:
         # Imported here: plan_analysis is optimizer-independent, but
@@ -614,7 +709,10 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
                       + analyze_plan(rewritten, schema))
         if violations:
             raise PlanVerificationError(violations)
-    return OptimizedPlan(rewritten, regions)
+    optimized = OptimizedPlan(rewritten, regions)
+    if cache_key is not None:
+        plan_cache.store(cache_key, optimized)
+    return optimized
 
 
 def build_region_plan_order(graph: JoinGraph) -> Node:

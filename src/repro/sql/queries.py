@@ -596,6 +596,24 @@ SQL_TEXTS: Dict[str, str] = {
         JOIN warehouse ON inv_warehouse_sk = w_warehouse_sk
         GROUP BY w_state
     """,
+    # -- service queries (q33/q34): deliberately overlapping with q19/q22 —
+    # -- identical FROM/JOIN subtrees under a *different* aggregate, the
+    # -- cross-query CSE targets (the shared join executes once per batch).
+    "q33_shared_customer_join": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN (SELECT * FROM customer WHERE c_income < 74000)
+          ON ss_customer_sk = c_customer_sk
+        GROUP BY c_region
+    """,
+    "q34_shared_window_join": """
+        SELECT c_region, SUM(ss_sales_price)
+        FROM store_sales
+        JOIN customer ON ss_customer_sk = c_customer_sk
+        JOIN (SELECT * FROM date_dim WHERE d_date_sk < 90)
+          ON ss_sold_date_sk = d_date_sk
+        GROUP BY c_region
+    """,
 }
 
 
@@ -624,6 +642,16 @@ def filtered_queries() -> Dict[str, Node]:
 def text_queries() -> Dict[str, Node]:
     """The text-only queries (q24+) — plans that exist solely as SQL."""
     return _from_sql([n for n in SQL_TEXTS if n not in HAND_BUILT])
+
+
+def service_queries() -> Dict[str, Node]:
+    """The concurrent-service batch: the filter-friendly q19-q23 plus the
+    deliberately-overlapping q33/q34, whose join subtrees duplicate q19's
+    and q22's — the cross-query CSE demonstration suite."""
+    out = filtered_queries()
+    out.update(_from_sql(["q33_shared_customer_join",
+                          "q34_shared_window_join"]))
+    return out
 
 
 def every_query() -> Dict[str, Node]:

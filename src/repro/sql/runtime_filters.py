@@ -38,7 +38,8 @@ The cost model charges each kind its actual merge shape
 the same (order-normalized) predicate chain surface the same key set, so
 the built payload can be reused verbatim. ``FilterCache`` keys entries on
 ``(table, normalized predicate chain, join key, kind, size params)`` and
-is invalidated by ``Catalog.version``; the planner quotes a cache-hit
+is invalidated by the catalog identity fingerprint (version + generation
+uid, ``catalog_fingerprint``); the planner quotes a cache-hit
 edge at ``cached_filter_cost`` (broadcast only — the build + reduce terms
 drop), which plans cached filters more aggressively than cold ones while
 leaving cold-cache decisions byte-identical.
@@ -60,6 +61,7 @@ from ..core.stats import TableStats
 from ..joins.table import Table
 from ..kernels.bloom import bloom_build, bloom_probe
 from ..kernels.zone_map import key_range, range_probe
+from .datagen import catalog_fingerprint
 from .logical import (Node, Project, RuntimeFilter, Scan, filter_chain)
 
 
@@ -261,10 +263,13 @@ class FilterCache:
     cache every quote and selection is byte-identical to the uncached
     planner, preserving the strictly-cheaper gate.
 
-    Validity is keyed on ``Catalog.version``: ``sync`` drops every entry
-    when the executor's catalog differs from the one the entries were
-    built against (regenerated data, new scale/seed/skew), so a stale
-    payload can never filter fresh data. Entries are never evicted
+    Validity is keyed on the catalog identity fingerprint
+    (``catalog_fingerprint``: version *and* generation uid): ``sync``
+    drops every entry when the executor's catalog differs from the one
+    the entries were built against (regenerated data, new
+    scale/seed/skew), so a stale payload can never filter fresh data —
+    even when two distinct catalogs happen to share a version number.
+    Entries are never evicted
     otherwise — payloads are tiny (bits on the wire by design) and the
     workload suite is finite; an LRU bound can ride on top when needed.
 
@@ -274,7 +279,7 @@ class FilterCache:
 
     def __init__(self) -> None:
         self._entries: Dict[tuple, _CacheEntry] = {}
-        self._catalog_version: Optional[int] = None
+        self._catalog_fingerprint: Optional[tuple] = None
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
@@ -284,13 +289,16 @@ class FilterCache:
 
     def sync(self, catalog) -> None:
         """Bind the cache to ``catalog``; invalidate everything if it is
-        not the catalog the current entries were built against."""
-        version = getattr(catalog, "version", None)
-        if version != self._catalog_version:
+        not the catalog the current entries were built against. Identity
+        is the full fingerprint (version + generation uid), so two
+        distinct catalogs sharing a version number can never reuse each
+        other's payloads."""
+        fingerprint = catalog_fingerprint(catalog)
+        if fingerprint != self._catalog_fingerprint:
             if self._entries:
                 self.invalidations += 1
             self._entries.clear()
-            self._catalog_version = version
+            self._catalog_fingerprint = fingerprint
 
     def contains(self, key: Optional[tuple]) -> bool:
         """Planner-side peek: would ``lookup`` hit? (No counter traffic —

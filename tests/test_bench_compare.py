@@ -1,0 +1,88 @@
+"""``benchmarks/run.py --compare`` regression gate: the zero-baseline
+absolute-delta fallback.
+
+Regression context: the comparator used to track only rows with
+``us_per_call > 0`` and gate on ``old > 0`` — so any metric whose
+baseline was 0.0 (derived rows, warm-cache passes like PR 5's
+``reduce_bytes == 0`` repeat runs) either never entered the comparison or
+auto-passed no matter how large the new value grew. Zero baselines now
+participate and regress through an absolute threshold instead of an
+(undefined) ratio.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.run import _tracked_metrics, compare_artifacts  # noqa: E402
+
+
+def _bundle(path: pathlib.Path, rows, seconds=1.0, bench="demo"):
+    payload = [{"bench": bench, "profile": "smoke", "kwargs": {},
+                "seconds": seconds,
+                "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                         for n, us in rows]}]
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def test_zero_rows_are_tracked(tmp_path):
+    """Zero-valued rows enter the metric set (they used to be dropped)."""
+    old = _bundle(tmp_path / "old.json", [("warm", 0.0), ("timed", 5.0)])
+    metrics = _tracked_metrics(
+        {"demo": json.loads(old.read_text())[0]})
+    assert metrics["demo/warm:us_per_call"] == 0.0
+    assert metrics["demo/timed:us_per_call"] == 5.0
+
+
+def test_zero_baseline_blowup_is_caught(tmp_path):
+    """A 0 -> large jump must regress via the absolute fallback — this is
+    exactly the case the old ratio gate silently auto-passed."""
+    old = _bundle(tmp_path / "old.json", [("warm", 0.0)])
+    new = _bundle(tmp_path / "new.json", [("warm", 5000.0)])
+    offenses = compare_artifacts(str(old), str(new), threshold=0.10,
+                                 abs_threshold=100.0)
+    assert len(offenses) == 1
+    assert "zero baseline" in offenses[0]
+
+
+def test_zero_baseline_small_drift_passes(tmp_path):
+    """Zero baseline with new value under the absolute gate: no offense
+    (and in particular no ZeroDivisionError computing a ratio)."""
+    old = _bundle(tmp_path / "old.json", [("warm", 0.0)])
+    new = _bundle(tmp_path / "new.json", [("warm", 50.0)])
+    assert compare_artifacts(str(old), str(new), threshold=0.10,
+                             abs_threshold=100.0) == []
+
+
+def test_ratio_gate_unchanged_for_positive_baselines(tmp_path):
+    old = _bundle(tmp_path / "old.json", [("timed", 100.0)])
+    slow = _bundle(tmp_path / "slow.json", [("timed", 120.0)])
+    ok = _bundle(tmp_path / "ok.json", [("timed", 105.0)])
+    assert len(compare_artifacts(str(old), str(slow), threshold=0.10)) == 1
+    assert compare_artifacts(str(old), str(ok), threshold=0.10) == []
+
+
+def test_vanished_metric_is_an_offense(tmp_path):
+    old = _bundle(tmp_path / "old.json", [("warm", 0.0), ("timed", 5.0)])
+    new = _bundle(tmp_path / "new.json", [("timed", 5.0)])
+    offenses = compare_artifacts(str(old), str(new))
+    assert len(offenses) == 1 and "missing" in offenses[0]
+
+
+def test_seconds_always_tracked(tmp_path):
+    old = _bundle(tmp_path / "old.json", [], seconds=10.0)
+    new = _bundle(tmp_path / "new.json", [], seconds=20.0)
+    offenses = compare_artifacts(str(old), str(new), threshold=0.5)
+    assert len(offenses) == 1 and "demo:seconds" in offenses[0]
+
+
+@pytest.mark.parametrize("old_us,new_us,n", [(0.0, 0.0, 0), (5.0, 5.0, 0)])
+def test_identical_bundles_clean(tmp_path, old_us, new_us, n):
+    old = _bundle(tmp_path / "old.json", [("row", old_us)])
+    new = _bundle(tmp_path / "new.json", [("row", new_us)])
+    assert len(compare_artifacts(str(old), str(new))) == n

@@ -19,6 +19,7 @@ import repro.sql.parser as sql_parser
 import repro.sql.plan_analysis as plan_analysis
 import repro.sql.printer as sql_printer
 import repro.sql.selectivity as sql_selectivity
+import repro.sql.service as sql_service
 
 ROOT = pathlib.Path(__file__).parent.parent
 DOCS = ROOT / "docs"
@@ -100,6 +101,31 @@ def test_sql_frontend_doc_covers_every_public_name():
     missing = surface - documented
     assert not missing, (
         f"docs/sql_frontend.md is missing {sorted(missing)}")
+
+
+def test_service_all_matches_public_surface():
+    assert set(sql_service.__all__) == _public_surface(sql_service)
+
+
+def test_serving_doc_covers_every_public_name():
+    """docs/serving.md backticks every public service name (plus the
+    PlanCache it documents the key discipline of) — the lifecycle
+    description must name the code that implements each step."""
+    doc = (DOCS / "serving.md").read_text()
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", doc))
+    missing = (set(sql_service.__all__) | {"PlanCache"}) - documented
+    assert not missing, (
+        f"docs/serving.md is missing {sorted(missing)} — every public "
+        "service name needs a place in the lifecycle doc")
+
+
+def test_architecture_links_to_serving():
+    """The single-query architecture page must point readers at the
+    multi-tenant serving page (and the link must resolve, which
+    test_markdown_links_resolve separately enforces)."""
+    arch = (DOCS / "architecture.md").read_text()
+    assert "](serving.md)" in arch, (
+        "docs/architecture.md no longer links to docs/serving.md")
 
 
 def _markdown_files():

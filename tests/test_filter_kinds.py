@@ -352,6 +352,29 @@ def test_filter_cache_invalidates_on_catalog_change(catalog):
     assert res2.cached_filters == 0 and cache.invalidations == 2
 
 
+def test_two_catalogs_sharing_a_version_never_share_payloads(catalog):
+    """Regression: ``FilterCache.sync`` used to bind by version integer
+    alone, so two distinct Catalog instances that happened to share a
+    version number silently reused each other's payloads — wrong rows
+    (a payload filters against the *other* catalog's customer data), not
+    just a perf miss. The binding is now the full identity fingerprint
+    (version + generation uid), so a forced version collision must still
+    invalidate."""
+    plan = filtered_queries()["q19_filtered_customer"]
+    cache = FilterCache()
+    strat = FilteredStrategy(cache=cache)
+    Executor(catalog, strat).execute(plan)
+    assert len(cache) > 0
+    other = generate(scale=0.1, p=4, seed=43)
+    other.version = catalog.version     # version collision, different data
+    assert other.uid != catalog.uid
+    base = Executor(other, RelJoinStrategy()).execute(plan)
+    res = Executor(other, strat).execute(plan)
+    assert cache.invalidations == 1     # uid mismatch invalidated
+    assert res.cached_filters == 0      # nothing foreign was reused
+    assert rows_close(_rows(res), _rows(base))
+
+
 def test_masked_build_side_is_not_cached(catalog):
     """A payload built from a build table that was itself masked by
     another runtime filter of the same query must NOT be stored under

@@ -1,4 +1,4 @@
-"""Golden-plan snapshot tests: the physical-plan decisions of q1-q32 are
+"""Golden-plan snapshot tests: the physical-plan decisions of q1-q34 are
 pinned in a checked-in JSON fixture so cost-model / planner edits can't
 silently regress them.
 
@@ -36,8 +36,9 @@ from repro.sql.logical import signature
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_plans.json"
 
-#: q1-q32: baseline + planner-target + skew-target + filter-target suites
-#: plus the text-only SQL queries (q24+).
+#: q1-q34: baseline + planner-target + skew-target + filter-target suites
+#: plus the text-only SQL queries (q24+, incl. the service suite's
+#: deliberately-overlapping q33/q34).
 #: (Skewed queries run on the uniform catalog here: their *selection*
 #: snapshot is the uniform-key one; bench_skew owns the skewed behaviour.)
 
@@ -107,5 +108,5 @@ def test_golden_plans(snapshot):
         assert got["dp"] == exp["dp"], qname
 
 
-def test_snapshot_covers_q1_to_q32(snapshot):
-    assert len(snapshot["queries"]) == 32
+def test_snapshot_covers_q1_to_q34(snapshot):
+    assert len(snapshot["queries"]) == 34
