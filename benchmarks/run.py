@@ -54,9 +54,9 @@ def _registry():
     (``--only`` still imports every registered module — imports are cheap
     relative to any single benchmark run.)"""
     from . import (bench_accuracy, bench_cost_model, bench_filters,
-                   bench_kernels, bench_psts, bench_reorder, bench_roofline,
-                   bench_service, bench_skew, bench_strategies,
-                   bench_w_sweep)
+                   bench_hypercube, bench_kernels, bench_psts,
+                   bench_reorder, bench_roofline, bench_service,
+                   bench_skew, bench_strategies, bench_w_sweep)
 
     s = SMOKE_SCALE
     return {
@@ -74,6 +74,8 @@ def _registry():
                     {"scale": 0.2, "runs": 1}, {"scale": s, "runs": 1}),
         "reorder": (bench_reorder, {"scale": 0.2}, {"scale": 0.2},
                     {"scale": s}),
+        "hypercube": (bench_hypercube, {"scale": 0.2}, {"scale": 0.2},
+                      {"scale": s}),
         "skew": (bench_skew, {"scale": 0.2, "zipfs": (0.0, 0.8, 1.2, 1.4)},
                  {"scale": 0.2, "zipfs": (0.0, 1.2)},
                  {"scale": s, "zipfs": (0.0, 1.2)}),
@@ -148,6 +150,17 @@ def compare_artifacts(old_path: str, new_path: str,
     return offenses
 
 
+def new_benchmarks(old_path: str, new_path: str) -> list:
+    """Benchmarks present only in the NEW artifact (freshly registered, no
+    baseline entry). ``--compare`` used to skip these silently — CI passed
+    while tracking none of their metrics. They are informational, not
+    offenses (a new benchmark is not a regression), but surfacing them
+    prompts the re-baseline that gives their metrics teeth."""
+    old = _load_artifacts(pathlib.Path(old_path))
+    new = _load_artifacts(pathlib.Path(new_path))
+    return sorted(set(new) - set(old))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -178,6 +191,9 @@ def main(argv=None) -> None:
                                      args.threshold, args.abs_threshold)
         for line in offenses:
             print(f"REGRESSION {line}")
+        for bench in new_benchmarks(args.compare[0], args.compare[1]):
+            print(f"NEW {bench}: not in the baseline — informational only; "
+                  f"re-baseline to start tracking its metrics")
         if offenses:
             sys.exit(1)
         print(f"no regressions beyond {100 * args.threshold:.0f}%")

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict
+from typing import Dict, Iterator, Sequence, Tuple
 
 #: The module's public surface. docs/cost_model.md documents every name
 #: listed here (pinned by tests/test_docs.py — extend both together).
@@ -33,6 +33,8 @@ __all__ = [
     "broadcast_hash_cost", "shuffle_hash_cost", "shuffle_sort_cost",
     "default_salt_factor", "salted_shuffle_hash_cost", "broadcast_nl_cost",
     "cartesian_cost", "method_cost", "all_costs",
+    # hypercube multi-way shuffle (cyclic join graphs)
+    "cube_shares", "cube_replication", "hypercube_shuffle_cost",
     # runtime-filter costs (bloom / zone-map / semi-join / cache)
     "BLOOM_DEFAULT_BITS_PER_KEY", "BLOOM_MIN_BITS", "BLOOM_MAX_HASHES",
     "ZONE_MAP_BITS", "SEMI_JOIN_BITS_PER_KEY",
@@ -54,6 +56,12 @@ class JoinMethod(enum.Enum):
     BROADCAST_NL = "broadcast_nl"
     CARTESIAN = "cartesian"
     SALTED_SHUFFLE_HASH = "salted_shuffle_hash"
+    #: Multi-way extension (not in the paper's Table 2): partition the p
+    #: tasks as a hypercube with one axis per join variable, hash every
+    #: relation on the axes of the variables it contains and replicate it
+    #: along the axes it does not, then run one local multi-way probe. Only
+    #: quoted for cyclic join-graph cores, never by the binary Algorithm 1.
+    HYPERCUBE_SHUFFLE = "hypercube_shuffle"
 
 
 #: Paper Table 2 — higher-rank methods are preferred when feasible.
@@ -61,6 +69,7 @@ RANK: Dict[JoinMethod, int] = {
     JoinMethod.BROADCAST_HASH: 3,
     JoinMethod.SHUFFLE_HASH: 3,
     JoinMethod.SALTED_SHUFFLE_HASH: 3,
+    JoinMethod.HYPERCUBE_SHUFFLE: 3,
     JoinMethod.SHUFFLE_SORT: 2,
     JoinMethod.BROADCAST_NL: 1,
     JoinMethod.CARTESIAN: 1,
@@ -290,6 +299,12 @@ def method_cost(method: JoinMethod, size_a: float, size_b: float,
         # Round-robin co-shuffle: destinations are key-independent, so the
         # exchange is skew-free by construction.
         return cartesian_cost(size_a, size_b, card_a, params)
+    if method is JoinMethod.HYPERCUBE_SHUFFLE:
+        # A multi-way method cannot price a binary join: it needs every
+        # relation of a cyclic core at once (hypercube_shuffle_cost). As a
+        # binary alternative it is never applicable, so Algorithm 1's
+        # two-sided comparisons can never pick it.
+        return math.inf
     raise ValueError(f"unknown method {method}")
 
 
@@ -302,6 +317,89 @@ def all_costs(size_a: float, size_b: float, card_a: float, card_b: float,
     return {m: method_cost(m, size_a, size_b, card_a, card_b, params,
                            skew_a, skew_b, pre_a, pre_b)
             for m in JoinMethod}
+
+
+# ---------------------------------------------------------------------------
+# Hypercube multi-way shuffle (cyclic join graphs; Shares/HyperCube scheme).
+#
+# The p tasks are arranged as a hypercube with one axis per join variable
+# (equivalence class of join keys), of share d_v per axis with prod(d_v) = p.
+# Relation R_i is hash-partitioned on the coordinates of the variables it
+# contains (p_i = prod of its axes' shares) and replicated along the axes it
+# does not own, a factor f_i = p / p_i. One local multi-way probe per task
+# then evaluates the whole cyclic core without materializing any binary
+# intermediate — the replication volume sum_i |R_i| * (p / p_i) replaces the
+# binary plan's intermediate shuffles.
+# ---------------------------------------------------------------------------
+
+def cube_replication(dims: Sequence[int],
+                     membership: Sequence[int]) -> int:
+    """Replication factor f = p / p_i of a relation owning the axes in
+    ``membership`` of a cube with per-axis shares ``dims``."""
+    p = 1
+    for d in dims:
+        p *= d
+    owned = 1
+    for ax in membership:
+        owned *= dims[ax]
+    return p // owned
+
+
+def hypercube_shuffle_cost(sizes: Sequence[float],
+                           factors: Sequence[float],
+                           params: CostParams) -> float:
+    """Overall cost of the hypercube multi-way shuffle join.
+
+    ``sizes[i]`` is |R_i| with R_0 the probe relation; ``factors[i]`` the
+    replication factor f_i = p / p_i. Each relation ships f_i copies of
+    itself through the exchange (w-weighted network workload
+    f_i * ((p-1)/p) |R_i| — the replication volume sum_i |R_i| (p / p_i),
+    with the same stays-local discount as Eq. 5), the probe copies are read
+    once and every build copy is hashed and probed (the same 1 / 2 local
+    coefficients as Eq. 10). At f = 1 for two relations this reproduces
+    ``shuffle_hash_cost`` exactly.
+    """
+    p, w = params.p, params.w
+    net = sum(w * (p - 1) / p * f * s for s, f in zip(sizes, factors))
+    local = factors[0] * sizes[0]
+    local += sum(2.0 * f * s for s, f in zip(sizes[1:], factors[1:]))
+    return net + local
+
+
+def _factorizations(p: int, k: int) -> Iterator[Tuple[int, ...]]:
+    """All ordered factorizations of p into k positive factors."""
+    if k == 1:
+        yield (p,)
+        return
+    d = 1
+    while d <= p:
+        if p % d == 0:
+            for rest in _factorizations(p // d, k - 1):
+                yield (d,) + rest
+        d += 1
+
+
+def cube_shares(p: int, n_axes: int,
+                memberships: Sequence[Sequence[int]],
+                sizes: Sequence[float],
+                params: CostParams) -> Tuple[int, ...]:
+    """Optimal per-axis shares (d_0, ..., d_{n_axes-1}) with prod = p.
+
+    Exhaustively enumerates the ordered factorizations of p (p and n_axes
+    are tiny) and returns the one minimizing
+    :func:`hypercube_shuffle_cost` over the relations' sizes, where
+    ``memberships[i]`` lists the axes relation i owns. Ties break toward
+    the first enumerated (most-balanced-first is not guaranteed; the cost
+    is what matters)."""
+    best: Tuple[int, ...] | None = None
+    best_cost = math.inf
+    for dims in _factorizations(p, n_axes):
+        factors = [float(cube_replication(dims, m)) for m in memberships]
+        cost = hypercube_shuffle_cost(sizes, factors, params)
+        if cost < best_cost:
+            best, best_cost = dims, cost
+    assert best is not None
+    return best
 
 
 # ---------------------------------------------------------------------------

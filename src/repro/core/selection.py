@@ -10,11 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 from .cost_model import (CostParams, JoinMethod, broadcast_hash_cost,
-                         broadcast_nl_cost, cartesian_cost,
-                         default_salt_factor, salted_shuffle_hash_cost,
+                         broadcast_nl_cost, cartesian_cost, cube_replication,
+                         cube_shares, default_salt_factor,
+                         hypercube_shuffle_cost, salted_shuffle_hash_cost,
                          shuffle_hash_cost, shuffle_sort_cost)
 from .stats import DEFAULT_WATERMARK_BYTES, TableStats
 
@@ -160,6 +161,37 @@ def select_join_method(left: TableStats, right: TableStats,
         m = JoinMethod.BROADCAST_NL
         why = "NL family"
     return Selection(m, why, costs[m], costs, swapped_sides=swapped)
+
+
+def select_hypercube(stats: Sequence[TableStats],
+                     memberships: Sequence[Sequence[int]], n_axes: int,
+                     binary_cost: float, params: CostParams,
+                     watermark_bytes: float = DEFAULT_WATERMARK_BYTES,
+                     ) -> Optional[Selection]:
+    """Quote the hypercube multi-way shuffle for a cyclic join-graph core.
+
+    ``stats[i]`` are the relations' statistics (index 0 = probe);
+    ``memberships[i]`` the cube axes relation i owns (one axis per join
+    variable, ``n_axes`` total); ``binary_cost`` the best binary plan's
+    modeled cost for the same core (the DP's quote). In the spirit of
+    Algorithm 1 the multi-way plan is selected *only when strictly
+    cheaper* than the best binary tree — on anything else (including
+    invalid statistics, where no trustworthy quote exists) the binary
+    plan stands and ``None`` is returned.
+    """
+    if not all(s.is_valid(watermark_bytes) for s in stats):
+        return None
+    sizes = [s.size_bytes for s in stats]
+    dims = cube_shares(params.p, n_axes, memberships, sizes, params)
+    factors = [float(cube_replication(dims, m)) for m in memberships]
+    cost = hypercube_shuffle_cost(sizes, factors, params)
+    if not cost < binary_cost * (1 - 1e-9):
+        return None
+    why = (f"cyclic core of {len(stats)} relations: cube {dims} "
+           f"replication volume {cost:.0f} < best binary plan "
+           f"{binary_cost:.0f}")
+    return Selection(JoinMethod.HYPERCUBE_SHUFFLE, why, cost,
+                     {JoinMethod.HYPERCUBE_SHUFFLE: cost})
 
 
 # ---------------------------------------------------------------------------

@@ -1,18 +1,22 @@
 """Distributed join engine: columnar tables, exchange collectives, local
-join algorithms, and the five physical distributed join methods."""
+join algorithms, and the physical distributed join methods (six binary
+methods plus the hypercube multi-way shuffle)."""
 
-from .exchange import (ExchangeReport, broadcast, key_skew, salted_shuffle,
-                       shuffle)
-from .methods import (JoinReport, broadcast_hash_join, broadcast_nl_join,
-                      cartesian_join, run_equi_join,
+from .exchange import (ExchangeReport, broadcast, hypercube_shuffle,
+                       key_skew, salted_shuffle, shuffle)
+from .methods import (HypercubeLink, HypercubeSpec, JoinReport,
+                      broadcast_hash_join, broadcast_nl_join, cartesian_join,
+                      hypercube_multiway_join, run_equi_join,
                       salted_shuffle_hash_join, shuffle_hash_join,
                       shuffle_sort_join)
 from .table import Table, concat_partitions, from_numpy, partition_round_robin
 
 __all__ = [
-    "ExchangeReport", "broadcast", "key_skew", "salted_shuffle", "shuffle",
-    "JoinReport", "broadcast_hash_join", "broadcast_nl_join",
-    "cartesian_join", "run_equi_join", "salted_shuffle_hash_join",
-    "shuffle_hash_join", "shuffle_sort_join", "Table", "concat_partitions",
-    "from_numpy", "partition_round_robin",
+    "ExchangeReport", "broadcast", "hypercube_shuffle", "key_skew",
+    "salted_shuffle", "shuffle",
+    "HypercubeLink", "HypercubeSpec", "JoinReport", "broadcast_hash_join",
+    "broadcast_nl_join", "cartesian_join", "hypercube_multiway_join",
+    "run_equi_join", "salted_shuffle_hash_join", "shuffle_hash_join",
+    "shuffle_sort_join", "Table", "concat_partitions", "from_numpy",
+    "partition_round_robin",
 ]

@@ -50,6 +50,7 @@ from ..core.psts import key_set
 from ..kernels.bloom import _positions
 from ..kernels.zone_map import _HI_IDENT, _LO_IDENT, merge_ranges
 from .local_join import hash_join, sort_join
+from .methods import HypercubeSpec
 from .slots import (SHUFFLE_SEED, gather_rows, hash32, pair_capacity,
                     slot_scatter)
 from .table import Table
@@ -68,6 +69,30 @@ def make_join_mesh(p: int) -> Mesh:
     """1-D mesh over the join parallelism p."""
     from ..launch.mesh import _axis_type_kwargs
     return jax.make_mesh((p,), (AXIS,), **_axis_type_kwargs(1))
+
+
+def cube_axis_names(n_axes: int) -> tuple[str, ...]:
+    """Axis names of the hypercube mesh (one axis per join variable)."""
+    return tuple(f"hc{i}" for i in range(n_axes))
+
+
+def make_cube_mesh(dims: tuple[int, ...]) -> Mesh:
+    """Multi-axis mesh for the hypercube multi-way shuffle: the p devices
+    arranged as a cube of shape ``dims`` (C-order, matching the global-view
+    ``hypercube_shuffle``'s flat cell index). A flat mesh is the degenerate
+    cube ``(p, 1, ..., 1)`` — same devices, same program, share-1 axes make
+    their collectives identities."""
+    from ..launch.mesh import _axis_type_kwargs
+    return jax.make_mesh(tuple(dims), cube_axis_names(len(dims)),
+                         **_axis_type_kwargs(len(dims)))
+
+
+def place_cube(table: Table, mesh: Mesh) -> Table:
+    """Place a stacked table with its partition axis sharded jointly over
+    all cube axes (partition i on cube cell i in C-order)."""
+    sh = NamedSharding(mesh, P(mesh.axis_names))
+    cols = {n: jax.device_put(c, sh) for n, c in table.columns.items()}
+    return Table(cols, jax.device_put(table.valid, sh))
 
 
 def place(table: Table, mesh: Mesh) -> Table:
@@ -160,6 +185,76 @@ def dist_shuffle_sort_join(a: Table, b: Table, a_key: str, b_key: str,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS)),
     )(a.columns, a.valid, b.columns, b.valid)
+    return Table(cols, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "mesh",
+                                             "capacity_factor"))
+def dist_hypercube_join(tables: tuple, spec: HypercubeSpec, mesh: Mesh,
+                        capacity_factor: float = 2.0) -> Table:
+    """Hypercube multi-way join under ``shard_map`` over the multi-axis
+    cube mesh — the distributed twin of ``methods.hypercube_multiway_join``.
+
+    Per relation the cube exchange is compositional in the mesh axes:
+    one ``all_to_all`` along each *owned* axis routes rows to their
+    hash coordinate, then one ``all_gather`` along each *free* axis
+    replicates the shard across the slice the relation does not own.
+    After the exchange every cube cell holds exactly the global view's
+    cell content, so the same local probe chain + closing checks run
+    unchanged. Tables must be placed with ``place_cube``.
+    """
+    names = mesh.axis_names
+    dims = tuple(mesh.shape[n] for n in names)
+
+    def cube_exchange(cols, valid, axis_keys):
+        owned = {ax for ax, _ in axis_keys}
+        for ax, col in axis_keys:
+            d = dims[ax]
+            cap = pair_capacity(valid.shape[0], d, capacity_factor)
+            dest = (hash32(cols[col], SHUFFLE_SEED)
+                    % jnp.uint32(d)).astype(jnp.int32)
+            scat = slot_scatter(dest, valid, d, cap)
+            send_cols, send_valid = gather_rows(cols, scat.idx)
+            cols = {n: jax.lax.all_to_all(c, names[ax], split_axis=0,
+                                          concat_axis=0).reshape(d * cap)
+                    for n, c in send_cols.items()}
+            valid = jax.lax.all_to_all(send_valid, names[ax], split_axis=0,
+                                       concat_axis=0).reshape(d * cap)
+        for ax in range(len(dims)):
+            if ax in owned:
+                continue
+            cols = {n: jax.lax.all_gather(c, names[ax]).reshape(-1)
+                    for n, c in cols.items()}
+            valid = jax.lax.all_gather(valid, names[ax]).reshape(-1)
+        return cols, valid
+
+    def f(cols_list, valid_list):
+        shards = []
+        for cols, valid, ak in zip(cols_list, valid_list, spec.axis_keys):
+            cols = {n: c[0] for n, c in cols.items()}
+            shards.append(cube_exchange(cols, valid[0], tuple(ak)))
+        cols, valid = dict(shards[0][0]), shards[0][1]
+        for lk in spec.links:
+            b_cols, b_valid = shards[lk.build]
+            res = hash_join(cols[lk.probe_col], valid, b_cols[lk.build_col],
+                            b_valid)
+            gathered, _ = gather_rows(b_cols, res.match_idx)
+            for n, c in gathered.items():
+                if n in cols:
+                    raise ValueError(f"duplicate column {n!r} in "
+                                     "multi-way join")
+                cols[n] = c
+            valid = valid & res.found
+        for c1, c2 in spec.checks:
+            valid = valid & (cols[c1] == cols[c2])
+        return ({n: c[None] for n, c in cols.items()}, valid[None])
+
+    spec_all = P(names)
+    cols, valid = _shard_map(
+        f, mesh=mesh,
+        in_specs=(spec_all, spec_all),
+        out_specs=(spec_all, spec_all),
+    )(tuple(t.columns for t in tables), tuple(t.valid for t in tables))
     return Table(cols, valid)
 
 

@@ -43,7 +43,7 @@ HOT_PARTITION_SHARE = 0.25
 class ExchangeReport:
     """Measured workload of one exchange (host-side ints/floats)."""
 
-    kind: str                  # "broadcast" | "shuffle" | "salted_shuffle"
+    kind: str   # "broadcast" | "shuffle" | "salted_shuffle" | "hypercube"
     network_bytes: float       # bytes that crossed partition boundaries
     local_bytes: float         # bytes that stayed partition-local
     overflow_rows: int = 0     # rows dropped by capacity (skew signal)
@@ -149,6 +149,72 @@ def shuffle(table: Table, key: str, capacity_factor: float = 2.0
     pair_cap = pair_capacity(cap, p, capacity_factor)
     dest = _dest_partition(table.column(key), p)  # (p, cap)
     return _exchange_by_dest(table, dest, pair_cap, key)
+
+
+# ---------------------------------------------------------------------------
+# Hypercube replication exchange (multi-way joins on cyclic join graphs).
+# ---------------------------------------------------------------------------
+
+
+def hypercube_shuffle(table: Table, dims: tuple[int, ...],
+                      axis_keys: tuple[tuple[int, str], ...],
+                      capacity_factor: float = 2.0
+                      ) -> tuple[Table, ExchangeReport]:
+    """Hypercube exchange: the p partitions are a cube of shape ``dims``
+    (one axis per join variable, prod(dims) = p, C-order flattening) and
+    ``axis_keys`` lists the (axis, key column) pairs this relation *owns*.
+
+    Each row is hash-partitioned on its owned axes' coordinates
+    (``hash(key) % dims[axis]``, the same hash both sides of a shared
+    variable use) and **replicated** along every axis the relation does not
+    own — one copy per combination of free-axis coordinates, a factor
+    f = p / prod(owned shares). Any tuple of rows agreeing on all shared
+    variables therefore meets on exactly one partition, which is what lets
+    the local multi-way probe evaluate a cyclic core without binary
+    intermediates. Network workload is *measured* over all f copies —
+    ground truth for the modeled replication volume |R| * (p / p_i).
+
+    Degenerate cases fall out naturally: at p = 1 (all shares 1) nothing
+    moves, and a flat mesh (one axis of share p, everything else share 1)
+    reproduces a plain key shuffle for the axis owner.
+    """
+    if not table.stacked:
+        raise ValueError("hypercube_shuffle expects a stacked table")
+    p = 1
+    for d in dims:
+        p *= d
+    if p != table.num_partitions:
+        raise ValueError(f"cube {dims} has {p} cells but table has "
+                         f"{table.num_partitions} partitions")
+    owned = {ax for ax, _ in axis_keys}
+    if any(ax < 0 or ax >= len(dims) for ax in owned):
+        raise ValueError(f"axis out of range for cube {dims}: {axis_keys}")
+    free = [ax for ax in range(len(dims)) if ax not in owned]
+    f = 1
+    for ax in free:
+        f *= dims[ax]
+    # C-order flat index: stride of axis j is prod(dims[j+1:]).
+    strides = [1] * len(dims)
+    for j in range(len(dims) - 2, -1, -1):
+        strides[j] = strides[j + 1] * dims[j + 1]
+    cap = table.capacity
+    wide_cols = {n: jnp.tile(c, (1, f)) for n, c in table.columns.items()}
+    wide_valid = jnp.tile(table.valid, (1, f))
+    dest = jnp.zeros(wide_valid.shape, jnp.int32)
+    for ax, col in axis_keys:
+        coord = (hash32(wide_cols[col], SHUFFLE_SEED)
+                 % jnp.uint32(dims[ax])).astype(jnp.int32)
+        dest = dest + coord * strides[ax]
+    # Replica r of a row takes the r-th combination of free-axis
+    # coordinates (mixed radix over the free shares).
+    rep = jnp.repeat(jnp.arange(f, dtype=jnp.int32), cap)[None, :]
+    rem = jnp.broadcast_to(rep, wide_valid.shape)
+    for ax in free:
+        dest = dest + (rem % dims[ax]) * strides[ax]
+        rem = rem // dims[ax]
+    wide = Table(wide_cols, wide_valid)
+    pair_cap = pair_capacity(cap * f, p, capacity_factor)
+    return _exchange_by_dest(wide, dest, pair_cap, None, kind="hypercube")
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from ..core.cost_model import JoinMethod
-from .exchange import ExchangeReport, broadcast, salted_shuffle, shuffle
-from .local_join import hash_join, nested_loop_join, sort_join
+from ..kernels import ops as kops
+from .exchange import (ExchangeReport, broadcast, hypercube_shuffle,
+                       salted_shuffle, shuffle)
+from .local_join import (A_SENTINEL, B_SENTINEL, hash_join, nested_loop_join,
+                         sort_join)
 from .slots import gather_rows
 from .table import Table
 
@@ -235,6 +238,123 @@ def cartesian_join(a: Table, b: Table,
                      + a.count() / p * rows_b * b_full.row_bytes)
     rep = JoinReport(JoinMethod.CARTESIAN, [shuffle_like], nl_bytes,
                      out.count())
+    return out, rep
+
+
+# ---------------------------------------------------------------------------
+# Hypercube multi-way shuffle join (cyclic join graphs).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HypercubeLink:
+    """One equi-edge of the local multi-way probe: look up ``probe_col`` of
+    the accumulated probe row (a relation-0 column, or a column gathered
+    from an earlier link's build) in ``build_col`` of relation ``build``."""
+
+    build: int       # index into the relation list (>= 1)
+    probe_col: str   # key column available on the accumulated probe row
+    build_col: str   # unique key column of the build relation
+
+
+@dataclasses.dataclass(frozen=True)
+class HypercubeSpec:
+    """Physical plan of one hypercube multi-way join.
+
+    ``dims`` is the cube shape (prod = p, one axis per join variable);
+    ``axis_keys[i]`` lists relation i's owned (axis, key column) pairs —
+    it is hash-partitioned on those and replicated along the rest.
+    ``links`` are resolved in order; ``checks`` are the closing column
+    equalities evaluated on the fully joined row (the cyclic edges the
+    binary engine would have to re-shuffle for).
+    """
+
+    dims: tuple
+    axis_keys: tuple
+    links: tuple
+    checks: tuple
+
+
+def _sanitized(t: Table, col: str, sentinel: int) -> jax.Array:
+    return jnp.where(t.valid, t.column(col), sentinel).astype(jnp.int32)
+
+
+def hypercube_multiway_join(tables: list, spec: HypercubeSpec,
+                            capacity_factor: float = 2.0,
+                            use_kernel: bool = False
+                            ) -> tuple[Table, JoinReport]:
+    """Hypercube multi-way shuffle join: one replication exchange per
+    relation, then a single local probe chain per partition — no binary
+    intermediates ever cross the network.
+
+    Every relation is cube-partitioned by ``hypercube_shuffle``; because
+    each output tuple's variable assignment lands on exactly one cube cell
+    and the build key columns are globally unique, a chain of first-match
+    local probes plus the closing ``checks`` produces each result row
+    exactly once (no cross-partition dedup needed). The probe relation is
+    index 0; its rows (with gathered build payloads) form the output.
+    """
+    shards: list[Table] = []
+    exs: list[ExchangeReport] = []
+    for t, ak in zip(tables, spec.axis_keys):
+        sh, ex = hypercube_shuffle(t, spec.dims, tuple(ak), capacity_factor)
+        shards.append(sh)
+        exs.append(ex)
+
+    probe = shards[0]
+    cols = dict(probe.columns)
+    valid = probe.valid
+
+    fused = (use_kernel and len(spec.links) == 2
+             and all(lk.probe_col in probe.columns for lk in spec.links))
+    if fused:
+        # 3-way case on the TPU path: both probe key columns stream through
+        # one fused Pallas kernel (dense in-partition match; build keys are
+        # unique so first-match is exact).
+        l1, l2 = spec.links
+        b1, b2 = shards[l1.build], shards[l2.build]
+        idx1, idx2 = jax.vmap(
+            lambda a1, a2, bk, ck: kops.probe3(a1, a2, bk, ck))(
+            jnp.where(valid, cols[l1.probe_col], A_SENTINEL).astype(jnp.int32),
+            jnp.where(valid, cols[l2.probe_col], A_SENTINEL).astype(jnp.int32),
+            _sanitized(b1, l1.build_col, B_SENTINEL),
+            _sanitized(b2, l2.build_col, B_SENTINEL))
+        for b, idx in ((b1, idx1), (b2, idx2)):
+            gathered = jax.vmap(lambda bc, ix: gather_rows(bc, ix)[0])(
+                b.columns, jnp.maximum(idx, 0))
+            for name, col in gathered.items():
+                if name in cols:
+                    raise ValueError(f"duplicate column {name!r} in "
+                                     "multi-way join")
+                cols[name] = col
+            valid = valid & (idx >= 0)
+    else:
+        for lk in spec.links:
+            b = shards[lk.build]
+            res = jax.vmap(
+                lambda ak_, av, bk, bv: hash_join(ak_, av, bk, bv,
+                                                  use_kernel=use_kernel)
+            )(cols[lk.probe_col], valid, b.column(lk.build_col), b.valid)
+            gathered = jax.vmap(lambda bc, ix: gather_rows(bc, ix)[0])(
+                b.columns, jnp.maximum(res.match_idx, 0))
+            for name, col in gathered.items():
+                if name in cols:
+                    raise ValueError(f"duplicate column {name!r} in "
+                                     "multi-way join")
+                cols[name] = col
+            valid = valid & res.found
+
+    for c1, c2 in spec.checks:
+        valid = valid & (cols[c1] == cols[c2])
+
+    out = Table(cols, valid)
+    out.partitioned_by = None
+    # Measured local workload mirrors the binary methods' convention: one
+    # probe pass over the (replicated) probe side, build + probe touch of
+    # each (replicated) build side.
+    local = float(probe.count() * probe.row_bytes
+                  + sum(2.0 * s.count() * s.row_bytes for s in shards[1:]))
+    rep = JoinReport(JoinMethod.HYPERCUBE_SHUFFLE, exs, local, out.count())
     return out, rep
 
 

@@ -40,6 +40,22 @@ def ref_equi_join(a_cols: Dict[str, np.ndarray], b_cols: Dict[str, np.ndarray],
     return out
 
 
+def ref_multiway_join(tables, links, checks=()) -> Dict[str, np.ndarray]:
+    """Multi-way cyclic-join oracle. ``tables[0]`` is the probe; each link
+    ``(build_index, probe_col, build_col)`` is an FK->PK lookup into
+    ``tables[build_index]`` (build keys unique) whose columns are gathered
+    into the output row; ``checks`` are residual ``(col_a, col_b)``
+    equalities — the closing edges of the cyclic core — applied to the
+    fully gathered row."""
+    out = {n: np.asarray(c) for n, c in tables[0].items()}
+    for bi, pcol, bcol in links:
+        out = ref_equi_join(out, tables[bi], pcol, bcol)
+    for ca, cb in checks:
+        keep = out[ca] == out[cb]
+        out = {n: c[keep] for n, c in out.items()}
+    return out
+
+
 def rows_as_set(cols: Dict[str, np.ndarray]):
     """Multiset-comparable representation of a table's rows."""
     names = sorted(cols)

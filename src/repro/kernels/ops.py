@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from .bitonic_sort import MAX_TILE, bitonic_sort_tile
 from .partition_hist import partition_hist
-from .tiled_probe import tiled_probe
+from .tiled_probe import tiled_probe, tiled_probe3
 
 
 @functools.cache
@@ -26,6 +26,14 @@ def probe(a_keys: jax.Array, b_keys: jax.Array, *, ta: int = 256,
           tb: int = 512) -> jax.Array:
     """First-match index of each probe key in the build keys (-1 if none)."""
     return tiled_probe(a_keys, b_keys, ta=ta, tb=tb, interpret=_interpret())
+
+
+def probe3(a1_keys: jax.Array, a2_keys: jax.Array, b_keys: jax.Array,
+           c_keys: jax.Array, *, ta: int = 256, tb: int = 512
+           ) -> tuple[jax.Array, jax.Array]:
+    """Fused two-build first-match probe (hypercube 3-way local join)."""
+    return tiled_probe3(a1_keys, a2_keys, b_keys, c_keys, ta=ta, tb=tb,
+                        interpret=_interpret())
 
 
 def hist(dest: jax.Array, nd: int, *, tn: int = 1024) -> jax.Array:

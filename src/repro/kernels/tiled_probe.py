@@ -84,3 +84,85 @@ def tiled_probe(a_keys: jax.Array, b_keys: jax.Array, *,
     # matches landing in the padded tail (a probe key equal to the pad
     # sentinel -2) are not real build rows — found by hypothesis.
     return jnp.where((out == INT32_MAX) | (out >= nb), -1, out)
+
+
+# ---------------------------------------------------------------------------
+# 3-way extension: one fused probe of two key columns against two builds.
+# ---------------------------------------------------------------------------
+
+
+def _probe3_kernel(a1_ref, a2_ref, b_ref, c_ref, out1_ref, out2_ref, *,
+                   tb: int):
+    """One (TA, TB) step of the fused 3-way probe: both equality matrices
+    share the probe tile's VMEM residency and the same grid walk."""
+    jb = pl.program_id(1)
+
+    @pl.when(jb == 0)
+    def _init():
+        out1_ref[...] = jnp.full_like(out1_ref, INT32_MAX)
+        out2_ref[...] = jnp.full_like(out2_ref, INT32_MAX)
+
+    col = jax.lax.broadcasted_iota(
+        jnp.int32, (a1_ref.shape[0], tb), 1) + jb * tb
+    eq1 = a1_ref[...][:, None] == b_ref[...][None, :]
+    out1_ref[...] = jnp.minimum(
+        out1_ref[...], jnp.min(jnp.where(eq1, col, INT32_MAX), axis=1))
+    eq2 = a2_ref[...][:, None] == c_ref[...][None, :]
+    out2_ref[...] = jnp.minimum(
+        out2_ref[...], jnp.min(jnp.where(eq2, col, INT32_MAX), axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb", "interpret"))
+def tiled_probe3(a1_keys: jax.Array, a2_keys: jax.Array,
+                 b_keys: jax.Array, c_keys: jax.Array, *,
+                 ta: int = DEFAULT_TA, tb: int = DEFAULT_TB,
+                 interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused first-match probe for the hypercube 3-way local join: for each
+    probe row i, find the first j with ``b_keys[j] == a1_keys[i]`` and the
+    first k with ``c_keys[k] == a2_keys[i]`` in ONE kernel.
+
+    Both build sides are padded to a common tile-multiple length so a single
+    grid walk streams them side by side; each grid step min-accumulates two
+    output tiles against the resident probe tile. Sentinel conventions match
+    ``tiled_probe`` (invalid probe -1, invalid/pad build -2; INT32_MAX
+    no-match converted to -1).
+    """
+    for k in (a1_keys, a2_keys, b_keys, c_keys):
+        if k.dtype != jnp.int32:
+            raise TypeError("tiled_probe3 expects int32 keys")
+    na = a1_keys.shape[0]
+    nb, nc = b_keys.shape[0], c_keys.shape[0]
+    ta = min(ta, max(8, na))
+    tb = min(tb, max(128, max(nb, nc)))
+    n_build = max(nb, nc)
+    n_build += (-n_build) % tb
+    a_pad = (-na) % ta
+    a1_p = jnp.pad(a1_keys, (0, a_pad), constant_values=-1)
+    a2_p = jnp.pad(a2_keys, (0, a_pad), constant_values=-1)
+    b_p = jnp.pad(b_keys, (0, n_build - nb), constant_values=-2)
+    c_p = jnp.pad(c_keys, (0, n_build - nc), constant_values=-2)
+
+    grid = (a1_p.shape[0] // ta, n_build // tb)
+    out1, out2 = pl.pallas_call(
+        functools.partial(_probe3_kernel, tb=tb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ta,), lambda i, j: (i,)),
+            pl.BlockSpec((ta,), lambda i, j: (i,)),
+            pl.BlockSpec((tb,), lambda i, j: (j,)),
+            pl.BlockSpec((tb,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ta,), lambda i, j: (i,)),
+            pl.BlockSpec((ta,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a1_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((a1_p.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a1_p, a2_p, b_p, c_p)
+    out1, out2 = out1[:na], out2[:na]
+    out1 = jnp.where((out1 == INT32_MAX) | (out1 >= nb), -1, out1)
+    out2 = jnp.where((out2 == INT32_MAX) | (out2 >= nc), -1, out2)
+    return out1, out2

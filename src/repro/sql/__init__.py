@@ -21,9 +21,9 @@ from .planner import (OptimizedPlan, PlanCache, enumerate_join_order,
                       plan_runtime_filters, prune_projections,
                       push_down_filters)
 from .printer import to_sql
-from .queries import (all_queries, every_query, filtered_queries,
-                      misordered_queries, service_queries, skewed_queries,
-                      text_queries)
+from .queries import (all_queries, cyclic_queries, every_query,
+                      filtered_queries, misordered_queries, service_queries,
+                      skewed_queries, text_queries)
 from .selectivity import derive_selectivity
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, FilterQuote, RuntimeFilterKind,
@@ -52,7 +52,8 @@ __all__ = ["SqlBindError", "bind", "parse_sql", "SqlSyntaxError", "parse",
            "enumerate_join_order", "modeled_plan_cost", "modeled_tree_cost",
            "optimize",
            "plan_runtime_filters", "prune_projections", "push_down_filters",
-           "all_queries", "every_query", "filtered_queries",
+           "all_queries", "cyclic_queries", "every_query",
+           "filtered_queries",
            "misordered_queries", "service_queries", "skewed_queries",
            "DEFAULT_FILTER_KINDS",
            "FILTER_KINDS", "FilterCache", "FilterQuote", "RuntimeFilterKind",

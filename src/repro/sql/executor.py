@@ -29,13 +29,15 @@ from ..core.stats import (StatsSource, TableStats, estimate_filter,
                           estimate_group_by, estimate_join)
 from ..joins.aggregate import group_aggregate
 from ..joins.exchange import key_skew
-from ..joins.methods import JoinReport, run_equi_join
+from ..joins.methods import (HypercubeLink, HypercubeSpec, JoinReport,
+                             hypercube_multiway_join, run_equi_join)
 from ..joins.table import Table, compact_partitions
 from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
                       RuntimeFilter, Scan, augment_edges,
                       effective_selectivity, extract_join_graph,
-                      key_retain_fraction, leaf_retain_fraction, signature)
+                      key_retain_fraction, leaf_columns,
+                      leaf_retain_fraction, signature)
 from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
                             audit_exchanges, audit_filter_decision,
                             audit_selection, catalog_dtypes, check_cache_reuse,
@@ -44,8 +46,9 @@ from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
                             check_schema_preserved)
 from .planner import (JoinStep, catalog_base_stats, catalog_schema,
                       enumerate_join_order, leaf_key_domain,
-                      modeled_tree_cost, plan_runtime_filters,
-                      prune_projections, push_down_filters)
+                      modeled_tree_cost, plan_hypercube,
+                      plan_runtime_filters, prune_projections,
+                      push_down_filters)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, build_filter_payload,
                               filter_cache_key, predicate_chain,
                               probe_filter_mask)
@@ -212,6 +215,7 @@ class Executor:
                  use_kernel: bool = False, capacity_factor: float = 2.0,
                  compact: bool = True, reorder: Optional[bool] = None,
                  verify: Optional[bool] = None,
+                 hypercube: Optional[bool] = None,
                  intermediates: Optional[Dict[str, Table]] = None):
         self.catalog = catalog
         self.strategy = strategy
@@ -225,6 +229,13 @@ class Executor:
         # reorder=True) to enable pushdown/pruning + adaptive join reordering.
         self.reorder = (getattr(strategy, "reorder", False)
                         if reorder is None else reorder)
+        # Hypercube multi-way execution for cyclic regions (eqcol closing
+        # predicates above a reorderable region). Armed whenever reordering
+        # is — the selection itself stays cost-gated, so acyclic plans and
+        # losing quotes are untouched. ``hypercube=False`` forces the
+        # binary plan (the benchmark's comparison arm).
+        self.hypercube = (getattr(strategy, "hypercube", True)
+                          if hypercube is None else hypercube)
         # Skew-aware strategies get runtime key-skew measurements attached
         # to the boundary statistics (everyone else sees the uniform 1.0,
         # keeping the paper's strategies bit-identical and measurement-free).
@@ -321,6 +332,12 @@ class Executor:
             return _Annotated(t, measured, est)
 
         if isinstance(node, Filter):
+            if node.op == "eqcol" and self.reorder and self.hypercube:
+                # Closing edge(s) of a possibly-cyclic region: quote the
+                # hypercube multi-way shuffle against the best binary tree.
+                ann = self._try_hypercube(node)
+                if ann is not None:
+                    return ann
             child = self._eval(node.child)
             t = _apply_filter(child.table, node)
             # In-stage operator: runtime stats are *propagated estimates*
@@ -716,6 +733,90 @@ class Executor:
             return self._boundary_stats(ann, graph.leaves[tree])
         return ann.measured if self.adaptive else ann.estimated
 
+    # -- hypercube multi-way execution (cyclic join cores) ---------------------
+
+    def _try_hypercube(self, node: Filter) -> Optional[_Annotated]:
+        """Quote + execute the hypercube multi-way shuffle for a cyclic
+        region: one-or-more consecutive eqcol Filters (the closing edges)
+        sitting directly above a reorderable INNER region. Returns None
+        whenever the shape does not match or the multi-way quote is not
+        strictly cheaper than the best binary tree — the caller then falls
+        through to the binary path, which evaluates the same eqcol
+        predicates as post-join residuals (identical semantics)."""
+        eqcols: List[Filter] = []
+        base: Node = node
+        while isinstance(base, Filter) and base.op == "eqcol":
+            eqcols.append(base)
+            base = base.child
+        graph = extract_join_graph(base, self._schema)
+        if graph is None or graph.n < 3:
+            return None
+        cols = [frozenset(leaf_columns(leaf, self._schema))
+                for leaf in graph.leaves]
+
+        def owner(col):
+            found = [i for i in range(graph.n) if col in cols[i]]
+            return found[0] if len(found) == 1 else None
+
+        closing = []
+        for f in eqcols:
+            u, v = owner(f.column), owner(str(f.column2))
+            if u is None or v is None or u == v:
+                return None
+            closing.append(((u, f.column), (v, str(f.column2))))
+        # Materialize the region leaves (needed under either plan) for
+        # their adaptive runtime statistics; roll back the audit trail if
+        # the binary plan stands, since the caller re-evaluates them.
+        n_dec, n_fil = len(self._decisions), len(self._filters)
+        anns = [self._eval(leaf) for leaf in graph.leaves]
+        stats = [self._boundary_stats(a, leaf)
+                 for a, leaf in zip(anns, graph.leaves)]
+        retain = [leaf_retain_fraction(leaf) for leaf in graph.leaves]
+        binary = modeled_tree_cost(graph, stats, retain, self._params)
+        order = enumerate_join_order(stats, retain, augment_edges(graph),
+                                     self._params)
+        if order is not None:
+            binary = min(binary, order.cost)
+        hp = plan_hypercube(graph, closing, stats, binary, self._params)
+        if hp is None:
+            del self._decisions[n_dec:]
+            del self._filters[n_fil:]
+            return None
+        spec = HypercubeSpec(
+            dims=hp.dims, axis_keys=hp.axis_keys,
+            links=tuple(HypercubeLink(*lk) for lk in hp.links),
+            checks=hp.checks)
+        tables = tuple(anns[i].table for i in hp.order)
+        out, rep = self._run_hypercube_with_retry(tables, spec)
+        if self.compact:
+            out = compact_partitions(out)
+        probe = hp.order[0]
+        build = max(hp.order[1:], key=lambda i: stats[i].size_bytes)
+        props = JoinProperties()
+        if self.verify:
+            self._gate(audit_selection(hp.selection, stats[probe],
+                                       stats[build], props, self._params))
+            self._gate(audit_exchanges(hp.selection, props, rep))
+        self._decisions.append(JoinDecision(hp.selection, stats[probe],
+                                            stats[build], rep, props=props))
+        est = anns[probe].estimated
+        for i in hp.order[1:]:
+            est = estimate_join(est, anns[i].estimated)
+        for f in eqcols:
+            est = est.scaled(effective_selectivity(f))
+        return _Annotated(out, out.measure(), est)
+
+    def _run_hypercube_with_retry(self, tables, spec):
+        factor = self.capacity_factor
+        for _ in range(self.MAX_CAPACITY_RETRIES):
+            out, rep = hypercube_multiway_join(tables, spec,
+                                               capacity_factor=factor,
+                                               use_kernel=self.use_kernel)
+            if all(e.overflow_rows == 0 for e in rep.exchanges):
+                return out, rep
+            factor *= 2
+        raise RuntimeError("hypercube overflow persisted after retries")
+
     #: Overflow retries: geometric doubling (bounded memory growth per step,
     #: unlike the old ~p-times multiplier that could OOM a 20-partition run
     #: in one retry) with enough attempts to reach 2^6x the starting slot
@@ -776,6 +877,10 @@ def _apply_filter(table: Table, f: Filter) -> Table:
         m = jnp.zeros_like(table.valid)
         for v in f.values:
             m = m | (c == v)
+    elif f.op == "eqcol":
+        # Column-to-column equality: the binary engine's residual form of
+        # a cyclic core's closing join edge.
+        m = c == table.column(str(f.column2))
     else:
         raise ValueError(f"unknown filter op {f.op}")
     return table.with_valid(table.valid & m)

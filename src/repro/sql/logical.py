@@ -27,11 +27,15 @@ class Scan(Node):
 @dataclasses.dataclass(frozen=True)
 class Filter(Node):
     """Single-column predicate. ``op`` is one of ``eq | ne | lt | le | gt |
-    ge | between | in``; ``value2`` is BETWEEN's upper bound and ``values``
-    IN's literal list (both ignored by the other ops). ``selectivity`` is
-    the declared static estimate — ``None`` means *underived*, and every
-    consumer goes through :func:`effective_selectivity`, which falls back
-    to the schema-derived estimate (``sql.selectivity.derive_selectivity``).
+    ge | between | in | eqcol``; ``value2`` is BETWEEN's upper bound and
+    ``values`` IN's literal list (both ignored by the other ops).
+    ``eqcol`` is the one column-to-column op: it keeps rows where
+    ``column == column2`` — the closing edge of a cyclic join core, which
+    the binary engine can only evaluate as a post-join residual predicate.
+    ``selectivity`` is the declared static estimate — ``None`` means
+    *underived*, and every consumer goes through
+    :func:`effective_selectivity`, which falls back to the schema-derived
+    estimate (``sql.selectivity.derive_selectivity``).
     """
 
     child: Node
@@ -41,6 +45,7 @@ class Filter(Node):
     value2: float = 0.0
     values: Tuple[float, ...] = ()
     selectivity: Optional[float] = None
+    column2: Optional[str] = None  # eqcol's right-hand column
 
     def children(self):
         return (self.child,)
@@ -98,11 +103,14 @@ def _fmt_literal(v: float) -> str:
 
 def filter_literal(f: Filter) -> str:
     """The literal part of a Filter's signature tag: BETWEEN's two bounds,
-    IN's value list, or the single comparison constant."""
+    IN's value list, eqcol's right-hand column, or the single comparison
+    constant."""
     if f.op == "between":
         return f"{_fmt_literal(f.value)}:{_fmt_literal(f.value2)}"
     if f.op == "in":
         return ",".join(_fmt_literal(v) for v in f.values)
+    if f.op == "eqcol":
+        return str(f.column2)
     return _fmt_literal(f.value)
 
 
@@ -178,6 +186,11 @@ class Distribution:
         ``Table.partitioned_by`` is its runtime shadow),
       * ``"broadcast"`` — every partition holds a full replica,
       * ``"singleton"`` — all rows live in one partition,
+      * ``"cube"`` — hypercube layout: hash-partitioned by ``key`` along
+        one cube axis and *replicated* along the others (the state a
+        ``hypercube_shuffle`` establishes). Replication means a plain
+        shuffle on ``key`` can NOT be elided — rows exist on several
+        partitions — so the property never satisfies ``partitioned_on``,
       * ``"arbitrary"`` — no guarantee (round-robin placement, salted
         shuffles, or any layout the analyzer cannot prove stronger).
 
@@ -203,6 +216,13 @@ SINGLETON = Distribution("singleton")
 def hash_dist(key: str) -> Distribution:
     """Hash-partitioned-on-``key`` distribution."""
     return Distribution("hash", key)
+
+
+def cube_dist(key: str) -> Distribution:
+    """Cube-partitioned distribution: hashed on ``key`` along one hypercube
+    axis, replicated along the rest. Strictly weaker than ``hash(key)`` for
+    exchange elision (see the class docstring)."""
+    return Distribution("cube", key)
 
 
 def infer_distribution(node: Node) -> Distribution:
@@ -503,6 +523,33 @@ def shared_subtree_candidates(plan: Node):
             yield from go(child, node)
 
     yield from go(plan, None)
+
+
+def cyclic_core(n: int, pairs) -> frozenset:
+    """Cycle detection over a join region: the 2-core of the undirected
+    simple graph on ``n`` leaves with the given ``(u, v)`` edge pairs —
+    join-graph edges plus the closing column-equality (eqcol) edges.
+
+    Iteratively strips degree-<=1 vertices; whatever survives lies on at
+    least one cycle. Returns the surviving leaf set (empty for acyclic
+    regions). A triangle or clique query's relations all survive; a star
+    or chain strips to nothing — exactly the shapes where the hypercube
+    multi-way plan is (resp. is not) worth quoting."""
+    adj: dict = {i: set() for i in range(n)}
+    for u, v in pairs:
+        if u != v:
+            adj[u].add(v)
+            adj[v].add(u)
+    alive = set(range(n))
+    changed = True
+    while changed:
+        changed = False
+        for v in list(alive):
+            deg = sum(1 for u in adj[v] if u in alive)
+            if deg <= 1:
+                alive.remove(v)
+                changed = True
+    return frozenset(alive)
 
 
 def key_equivalence_classes(graph: JoinGraph):

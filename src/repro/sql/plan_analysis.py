@@ -227,6 +227,12 @@ def infer_properties(plan: Node, schema: Schema,
                     "P1_UNKNOWN_COLUMN", path,
                     f"filter references {node.column!r}, not in input "
                     f"columns {sorted(child.columns)}"))
+            if (node.op == "eqcol"
+                    and node.column2 not in child.columns):
+                violations.append(_v(
+                    "P1_UNKNOWN_COLUMN", path,
+                    f"eqcol filter references {node.column2!r}, not in "
+                    f"input columns {sorted(child.columns)}"))
             return done(path, child)
 
         if isinstance(node, Project):
@@ -492,6 +498,12 @@ def audit_selection(sel: Selection, left: TableStats, right: TableStats,
                       "build (replicated) side is the larger one"))
     if props.hint is not None or sel.used_fallback or not sel.costs:
         return out
+    if sel.method is JoinMethod.HYPERCUBE_SHUFFLE:
+        # Multi-way selections are quoted by the hypercube planner against
+        # the best binary tree's cost, not by the binary Algorithm 1 on a
+        # (left, right) pair — there is no two-sided reference to replay.
+        # C1/S1 above still apply.
+        return out
     if out:
         return out  # corrupted inputs make the reference run meaningless
     ref = select_join_method(left, right,
@@ -531,6 +543,18 @@ def audit_exchanges(sel: Selection, props: JoinProperties, report,
     """
     out: List[Violation] = []
     exchanges = list(report.exchanges)
+    if sel.method is JoinMethod.HYPERCUBE_SHUFFLE:
+        # Multi-way: every relation pays its hypercube exchange — the cube
+        # distribution (hash on owned axes x replication along free axes)
+        # is never provable from any input property, so an elision is
+        # always a missing exchange.
+        for ex in exchanges:
+            if getattr(ex, "elided", False):
+                out.append(_v(
+                    "E1_MISSING_EXCHANGE", path,
+                    f"{ex.kind} exchange of the multi-way join elided — "
+                    f"cube distributions are never provably redundant"))
+        return out
     if sel.method in _ELIDABLE and len(exchanges) == 2:
         sides = (("probe", props.left_partitioned, exchanges[0]),
                  ("build", props.right_partitioned, exchanges[1]))
@@ -614,7 +638,8 @@ def verify_execution(result, params: CostParams) -> List[Violation]:
 
 def main(argv=None) -> int:
     """``python -m repro.sql.plan_analysis``: run all golden queries
-    (q1-q32, including the text-only SQL suite) under every strategy with the debug gates armed, plus the
+    (q1-q37, including the text-only SQL suite and the cyclic hypercube
+    targets) under every strategy with the debug gates armed, plus the
     static pass and the optimizer's P2 gate per query. Exits non-zero on
     any violation."""
     import argparse
@@ -622,8 +647,8 @@ def main(argv=None) -> int:
     from .datagen import generate
     from .executor import Executor
     from .planner import catalog_schema, optimize
-    from .queries import (every_query, filtered_queries, skewed_queries,
-                          text_queries)
+    from .queries import (cyclic_queries, every_query, filtered_queries,
+                          skewed_queries, text_queries)
     from .strategies import (FilteredStrategy, RelJoinStrategy,
                              ReorderingStrategy, SkewAwareStrategy,
                              default_strategies)
@@ -643,7 +668,7 @@ def main(argv=None) -> int:
     schema = catalog_schema(catalog)
     dtypes = catalog_dtypes(catalog)
     queries = {**every_query(), **skewed_queries(), **filtered_queries(),
-               **text_queries()}
+               **text_queries(), **cyclic_queries()}
     if args.queries:
         names = args.queries.split(",")
         unknown = [n for n in names if n not in queries]

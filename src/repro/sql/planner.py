@@ -29,15 +29,19 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod, cached_filter_cost, method_cost)
-from ..core.selection import JoinProperties, JoinType, select_join_method
-from ..core.stats import (TableStats, estimate_filter, estimate_group_by,
-                          estimate_join, estimate_project)
+                               JoinMethod, cached_filter_cost, cube_shares,
+                               method_cost)
+from ..core.selection import (JoinProperties, JoinType, Selection,
+                              select_hypercube, select_join_method)
+from ..core.stats import (DEFAULT_WATERMARK_BYTES, TableStats,
+                          estimate_filter, estimate_group_by, estimate_join,
+                          estimate_project)
 from .datagen import Catalog, catalog_fingerprint
 from .logical import (Aggregate, Filter, Join, JoinGraph, Node, Project,
                       RuntimeFilter, Scan, Schema, augment_edges,
-                      extract_join_graph, filter_chain, key_band_fraction,
-                      leaf_columns, leaf_retain_fraction, signature)
+                      cyclic_core, extract_join_graph, filter_chain,
+                      key_band_fraction, leaf_columns, leaf_retain_fraction,
+                      signature)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, FILTER_KINDS,
                               FilterCache, filter_cache_key)
 from .selectivity import derive_selectivity
@@ -282,6 +286,123 @@ def modeled_tree_cost(graph: JoinGraph, leaf_stats: List[TableStats],
 
 
 # ---------------------------------------------------------------------------
+# Hypercube multi-way planning (cyclic join cores)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HypercubePlan:
+    """Physical plan of one hypercube multi-way join over a cyclic region.
+
+    ``order`` lists the region's leaf indices with the probe relation
+    first; all positional fields below index into that order. ``links``
+    are the local probe chain as ``(build_position, probe_col,
+    build_col)`` triples; ``checks`` the residual column equalities
+    (unused binary edges + the closing eqcol predicates). ``selection``
+    is the winning HYPERCUBE_SHUFFLE quote against ``binary_cost``."""
+
+    order: Tuple[int, ...]
+    dims: Tuple[int, ...]
+    axis_keys: Tuple[Tuple[Tuple[int, str], ...], ...]
+    links: Tuple[Tuple[int, str, str], ...]
+    checks: Tuple[Tuple[str, str], ...]
+    selection: Selection
+    binary_cost: float
+
+
+def plan_hypercube(graph: JoinGraph, closing,
+                   leaf_stats: List[TableStats], binary_cost: float,
+                   params: CostParams,
+                   watermark_bytes: float = DEFAULT_WATERMARK_BYTES
+                   ) -> Optional[HypercubePlan]:
+    """Quote the hypercube multi-way shuffle against the best binary plan.
+
+    ``closing`` is the list of column-equality predicates written above
+    the region, as ``((leaf_u, col_u), (leaf_v, col_v))`` pairs — with the
+    graph's equi-join edges they form the (possibly cyclic) join graph.
+    Returns a plan only when (1) the region plus closing edges is one
+    cyclic core covering every leaf, (2) the shape is hypercube-executable
+    (a unique probe relation, every build reachable through the accumulated
+    probe row), and (3) Algorithm 1's multi-way extension prices it
+    *strictly cheaper* than ``binary_cost`` (the best binary tree's quote).
+    Anything else returns None and the binary plan stands.
+    """
+    n = graph.n
+    pairs = [(e.probe, e.build) for e in graph.edges]
+    pairs += [(a[0], b[0]) for a, b in closing]
+    if n < 3 or len(cyclic_core(n, pairs)) != n:
+        return None
+
+    # Join variables: key equivalence classes over equi + closing edges.
+    parent: Dict[tuple, tuple] = {}
+
+    def find(x):
+        parent.setdefault(x, x)
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in graph.edges:
+        parent[find((e.probe, e.probe_key))] = find((e.build, e.build_key))
+    for a, b in closing:
+        parent[find(tuple(a))] = find(tuple(b))
+    classes: Dict[tuple, set] = {}
+    for x in list(parent):
+        classes.setdefault(find(x), set()).add(x)
+    axes = sorted((sorted(c) for c in classes.values()
+                   if len({leaf for leaf, _ in c}) > 1))
+    if not axes:
+        return None
+
+    # Probe relation: the unique leaf never used as a build side.
+    builds = {e.build for e in graph.edges}
+    probes = [i for i in range(n) if i not in builds]
+    if len(probes) != 1:
+        return None
+    order = [probes[0]]
+    links: List[Tuple[int, str, str]] = []
+    used = set()
+    remaining = set(range(n)) - {probes[0]}
+    progress = True
+    while remaining and progress:
+        progress = False
+        for ei, e in enumerate(graph.edges):
+            if ei in used or e.build not in remaining or e.probe not in order:
+                continue
+            order.append(e.build)
+            links.append((len(order) - 1, e.probe_key, e.build_key))
+            used.add(ei)
+            remaining.discard(e.build)
+            progress = True
+    if remaining:
+        return None
+    checks = [(graph.edges[ei].probe_key, graph.edges[ei].build_key)
+              for ei in range(len(graph.edges)) if ei not in used]
+    checks += [(cu, cv) for (u, cu), (v, cv) in closing]
+
+    memberships: List[Tuple[int, ...]] = []
+    axis_keys: List[Tuple[Tuple[int, str], ...]] = []
+    for leaf in order:
+        keys = []
+        for ax, members in enumerate(axes):
+            cols = [c for (l, c) in members if l == leaf]
+            if cols:
+                keys.append((ax, cols[0]))
+        memberships.append(tuple(ax for ax, _ in keys))
+        axis_keys.append(tuple(keys))
+
+    stats = [leaf_stats[i] for i in order]
+    sel = select_hypercube(stats, memberships, len(axes), binary_cost,
+                           params, watermark_bytes)
+    if sel is None:
+        return None
+    dims = cube_shares(params.p, len(axes), memberships,
+                       [s.size_bytes for s in stats], params)
+    return HypercubePlan(tuple(order), tuple(dims), tuple(axis_keys),
+                         tuple(links), tuple(checks), sel, binary_cost)
+
+
+# ---------------------------------------------------------------------------
 # Runtime bloom-filter placement (sideways information passing)
 # ---------------------------------------------------------------------------
 
@@ -402,6 +523,11 @@ _LEFT_PUSHABLE = (JoinType.INNER, JoinType.LEFT_OUTER, JoinType.LEFT_SEMI,
 
 def _sink(f: Filter, schema: Schema) -> Node:
     c = f.child
+    if f.op == "eqcol":
+        # Column-to-column predicates reference two leaves of the region
+        # (the closing edge of a cyclic join core) — only evaluable where
+        # both columns coexist, i.e. exactly where they are written.
+        return f
     if isinstance(c, Join):
         try:
             lcols = leaf_columns(c.left, schema)
@@ -450,9 +576,11 @@ def prune_projections(node: Node, schema: Schema,
             return Project(node, keep)
         return node
     if isinstance(node, Filter):
+        need = required | {node.column}
+        if node.column2 is not None:
+            need |= {node.column2}
         return dataclasses.replace(
-            node, child=prune_projections(node.child, schema,
-                                          required | {node.column}))
+            node, child=prune_projections(node.child, schema, need))
     if isinstance(node, Project):
         keep = tuple(c for c in node.columns if c in required)
         if not keep:

@@ -300,6 +300,76 @@ def q23_semi_join_stores() -> Node:
     return Aggregate(j, "c_region", (("ss_sales_price", "sum"),))
 
 
+# ---------------------------------------------------------------------------
+# Cyclic join cores (hypercube multi-way targets): the closing edge of each
+# cycle is a column-to-column equality between two *build-side* columns —
+# inexpressible in the suite's SQL dialect (single-equality ON, literal-only
+# WHERE), so q35-q37 exist only as hand-built plans. The binary engine
+# evaluates the closing edge as a post-join eqcol residual; the hypercube
+# planner recognizes the cycle and quotes one multi-way shuffle against the
+# DP's best binary tree. Build sides are aggregates (unique group keys — the
+# engine's build contract) sized *relatively large* (> probe/k0), so the
+# binary plan pays real shuffles and re-ships its wide intermediate, which
+# is exactly the traffic the cube partitioning never creates.
+# ---------------------------------------------------------------------------
+
+
+def q35_triangle() -> Node:
+    """Triangle on fact tables: store_sales x (catalog_sales by customer) x
+    (inventory by item), closed on the item variable (the customer's
+    max catalog item must be this sale's item). The item axis spans all
+    three relations, so the best cube pure-hashes every relation —
+    replication-free — while the binary plan re-ships its wide
+    fact-sized intermediate at the second join."""
+    s = Aggregate(_cs(), "cs_bill_customer_sk", (("cs_item_sk", "max"),))
+    t = Aggregate(Scan("inventory"), "inv_item_sk",
+                  (("inv_warehouse_sk", "max"),
+                   ("inv_quantity_on_hand", "sum")))
+    j = Join(_ss(), s, "ss_customer_sk", "cs_bill_customer_sk")
+    j = Join(j, t, "ss_item_sk", "inv_item_sk")
+    f = Filter(j, "max_cs_item_sk", "eqcol", column2="inv_item_sk")
+    return Aggregate(f, "ss_store_sk", (("ss_sales_price", "sum"),))
+
+
+def q36_triangle_shared_axis() -> Node:
+    """The q35 rotation: catalog_sales probes (store_sales by customer) and
+    (inventory by item), closed on the item variable via store_sales'
+    max-item aggregate column. Same replication-free two-axis cube, with
+    the probe and both builds drawn from the other fact pairing."""
+    s = Aggregate(_ss(), "ss_customer_sk",
+                  (("ss_item_sk", "max"), ("ss_sales_price", "sum")))
+    t = Aggregate(Scan("inventory"), "inv_item_sk",
+                  (("inv_quantity_on_hand", "sum"),
+                   ("inv_warehouse_sk", "max")))
+    j = Join(_cs(), s, "cs_bill_customer_sk", "ss_customer_sk")
+    j = Join(j, t, "cs_item_sk", "inv_item_sk")
+    f = Filter(j, "max_ss_item_sk", "eqcol", column2="inv_item_sk")
+    return Aggregate(f, "cs_warehouse_sk", (("cs_sales_price", "sum"),))
+
+
+def q37_four_clique() -> Node:
+    """4-clique: every pair of relations shares a variable (customer, item,
+    date, warehouse). Three closing eqcol edges ride above the join tree;
+    the date variable spans all four relations, so the best cube
+    concentrates the whole budget on the date axis."""
+    r = _ss()
+    s = Aggregate(_cs(), "cs_bill_customer_sk",
+                  (("cs_warehouse_sk", "max"), ("cs_ship_date_sk", "max")))
+    t = Aggregate(Scan("inventory"), "inv_item_sk",
+                  (("inv_warehouse_sk", "max"), ("inv_date_sk", "max"),
+                   ("inv_quantity_on_hand", "sum")))
+    u = Aggregate(_cs(), "cs_ship_date_sk",
+                  (("cs_quantity", "count"), ("cs_sales_price", "sum")))
+    j = Join(r, s, "ss_customer_sk", "cs_bill_customer_sk")
+    j = Join(j, t, "ss_item_sk", "inv_item_sk")
+    j = Join(j, u, "ss_sold_date_sk", "cs_ship_date_sk")
+    f = Filter(j, "max_cs_warehouse_sk", "eqcol",
+               column2="max_inv_warehouse_sk")
+    f = Filter(f, "max_cs_ship_date_sk", "eqcol", column2="cs_ship_date_sk")
+    f = Filter(f, "max_inv_date_sk", "eqcol", column2="cs_ship_date_sk")
+    return Aggregate(f, "ss_store_sk", (("ss_net_profit", "sum"),))
+
+
 #: q1-q23's hand-built constructors — the structural reference the SQL
 #: round-trip test pins against SQL_TEXTS.
 HAND_BUILT: Dict[str, Callable[[], Node]] = {
@@ -637,6 +707,14 @@ def filtered_queries() -> Dict[str, Node]:
                       "q21_catalog_filtered_dates",
                       "q22_zone_map_window",
                       "q23_semi_join_stores"])
+
+
+def cyclic_queries() -> Dict[str, Node]:
+    """The cyclic-core queries (q35-q37): hand-built only — their closing
+    eqcol edges are inexpressible in the suite's SQL dialect."""
+    return {"q35_triangle": q35_triangle(),
+            "q36_triangle_shared_axis": q36_triangle_shared_axis(),
+            "q37_four_clique": q37_four_clique()}
 
 
 def text_queries() -> Dict[str, Node]:

@@ -102,6 +102,12 @@ def derive_selectivity(f: Filter,
     """
     if f.selectivity is not None:
         return f.selectivity
+    if f.op == "eqcol":
+        # Column-to-column equality: no literal to intersect with a domain.
+        # Two independent uniform columns over a shared domain of n values
+        # match with probability 1/n — but the estimator has no join-aware
+        # domain here, so keep the conservative default.
+        return DEFAULT_SELECTIVITY
     dom = datagen.COLUMN_DOMAINS.get(f.column)
     if dom is None:
         n = None

@@ -18,7 +18,8 @@ import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-from benchmarks.run import _tracked_metrics, compare_artifacts  # noqa: E402
+from benchmarks.run import (_tracked_metrics, compare_artifacts,  # noqa: E402
+                            new_benchmarks)
 
 
 def _bundle(path: pathlib.Path, rows, seconds=1.0, bench="demo"):
@@ -86,3 +87,21 @@ def test_identical_bundles_clean(tmp_path, old_us, new_us, n):
     old = _bundle(tmp_path / "old.json", [("row", old_us)])
     new = _bundle(tmp_path / "new.json", [("row", new_us)])
     assert len(compare_artifacts(str(old), str(new))) == n
+
+
+def test_new_only_benchmark_is_surfaced_not_an_offense(tmp_path):
+    """A benchmark present only in NEW (freshly registered, never
+    baselined) used to be skipped silently — it must now be reported as
+    informational while still passing the regression gate."""
+    old = _bundle(tmp_path / "old.json", [("timed", 5.0)])
+    new_payloads = json.loads(
+        _bundle(tmp_path / "tmp.json", [("timed", 5.0)]).read_text())
+    new_payloads += json.loads(_bundle(
+        tmp_path / "tmp2.json", [("fresh_row", 3.0)],
+        bench="brand_new").read_text())
+    new = tmp_path / "new.json"
+    new.write_text(json.dumps(new_payloads))
+    assert compare_artifacts(str(old), str(new)) == []
+    assert new_benchmarks(str(old), str(new)) == ["brand_new"]
+    # Symmetric sanity: nothing is "new" when comparing a file to itself.
+    assert new_benchmarks(str(new), str(new)) == []

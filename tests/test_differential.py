@@ -34,7 +34,9 @@ from helpers.hypothesis_compat import strategies as st
 
 from repro.core.cost_model import JoinMethod, bloom_params
 from repro.joins import from_numpy, partition_round_robin, run_equi_join
-from repro.joins.ref import ref_equi_join, rows_as_set
+from repro.joins.methods import (HypercubeLink, HypercubeSpec,
+                                 hypercube_multiway_join)
+from repro.joins.ref import ref_equi_join, ref_multiway_join, rows_as_set
 from repro.kernels.bloom import bloom_build, bloom_probe
 from repro.sql.datagen import _zipf_fks
 
@@ -217,3 +219,115 @@ def test_fuzz_methods_agree(na, nb, skew_x10, seed):
     for method in ALL_METHODS:
         out, _ = _run_with_retry(method, A, B)
         assert rows_as_set(out.to_numpy()) == want, method
+
+
+# ---------------------------------------------------------------------------
+# Hypercube multi-way join (cyclic join graphs) vs the oracle.
+# ---------------------------------------------------------------------------
+
+#: Triangle geometry: R(ra, rb, v) x S(sb -> s_c) x T(ta -> t_c), closed by
+#: the check s_c == t_c over a small shared domain (so some rows survive).
+NT3, NS3, NC3 = 20, 24, 4
+CAP_CUBE = 192
+
+
+def _cube_case(name, rng):
+    """Adversarial (probe, build...) column dicts for the multi-way grid."""
+    s = {"sb": np.arange(NS3, dtype=np.int32),
+         "s_c": rng.integers(0, NC3, NS3).astype(np.int32)}
+    t = {"ta": np.arange(NT3, dtype=np.int32),
+         "t_c": rng.integers(0, NC3, NT3).astype(np.int32)}
+    if name == "skewed_key":
+        ra, rb = _zipf_fks(rng, 160, NT3, 1.8), _zipf_fks(rng, 160, NS3, 1.8)
+    else:
+        ra = rng.integers(0, NT3, 160).astype(np.int32)
+        rb = rng.integers(0, NS3, 160).astype(np.int32)
+    if name == "empty_relation":
+        s = {"sb": np.empty(0, np.int32), "s_c": np.empty(0, np.int32)}
+    r = {"ra": ra, "rb": rb, "v": np.arange(len(ra), dtype=np.int32)}
+    if name == "clique":
+        # Fourth relation on a third variable + a second closing check.
+        r["rc"] = rng.integers(0, NC3, 160).astype(np.int32)
+        u = {"uc": np.arange(NC3, dtype=np.int32),
+             "u_c": rng.integers(0, NC3, NC3).astype(np.int32)}
+        return r, s, t, u
+    return r, s, t
+
+
+def _cube_spec(name, dims):
+    """The physical plan matching _cube_case: axis 0 = variable a (R, T),
+    axis 1 = variable b (R, S); the clique adds axis 2 = variable c (R, U)
+    and a second closing check chaining through U's payload."""
+    links = (HypercubeLink(1, "rb", "sb"), HypercubeLink(2, "ra", "ta"))
+    checks = (("s_c", "t_c"),)
+    axis_keys = [((0, "ra"), (1, "rb")), ((1, "sb"),), ((0, "ta"),)]
+    if name == "clique":
+        axis_keys[0] = ((0, "ra"), (1, "rb"), (2, "rc"))
+        axis_keys.append(((2, "uc"),))
+        links += (HypercubeLink(3, "rc", "uc"),)
+        checks += (("t_c", "u_c"),)
+    return HypercubeSpec(dims=tuple(dims), axis_keys=tuple(axis_keys),
+                         links=links, checks=checks)
+
+
+def _run_cube_with_retry(tables, spec, use_kernel=False):
+    factor = 2.0
+    for _ in range(6):
+        out, rep = hypercube_multiway_join(tables, spec,
+                                           capacity_factor=factor,
+                                           use_kernel=use_kernel)
+        if all(e.overflow_rows == 0 for e in rep.exchanges):
+            return out, rep
+        factor *= 2
+    raise AssertionError("hypercube overflow persisted after retries")
+
+
+def _cube_tables(raw, p):
+    return [partition_round_robin(from_numpy(c, capacity=CAP_CUBE), p)
+            for c in raw]
+
+
+def _cube_dims(name, p):
+    if p == 1:
+        return (1,) * (3 if name == "clique" else 2)
+    return (2, 2, 2) if name == "clique" else (2, 4)
+
+
+CUBE_CASES = ("triangle", "clique", "empty_relation", "skewed_key")
+
+
+@pytest.mark.parametrize("p", [1, 8])
+@pytest.mark.parametrize("case", CUBE_CASES)
+def test_differential_hypercube(case, p):
+    """Multi-way grid: the hypercube join must equal the sequential
+    probe-then-filter oracle's row multiset on every cyclic shape,
+    including an empty build relation (empty result, no crash)."""
+    rng = np.random.default_rng(zlib.crc32(f"cube/{case}/{p}".encode()))
+    raw = _cube_case(case, rng)
+    spec = _cube_spec(case, _cube_dims(case, p))
+    want = rows_as_set(ref_multiway_join(
+        raw, [(lk.build, lk.probe_col, lk.build_col) for lk in spec.links],
+        spec.checks))
+    out, rep = _run_cube_with_retry(_cube_tables(raw, p), spec)
+    assert rows_as_set(out.to_numpy()) == want, (case, p)
+    assert rep.output_rows == len(want)
+    if case == "empty_relation":
+        assert not want
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_hypercube_cube_vs_flat_meshes_identical(use_kernel):
+    """The cube shape is a pure performance knob: every factorization of p
+    — cube, flat-by-a, flat-by-b — and the fused-kernel probe must yield
+    the identical row multiset."""
+    rng = np.random.default_rng(zlib.crc32(b"cube/mesh"))
+    raw = _cube_case("triangle", rng)
+    outs = []
+    for dims in [(2, 4), (4, 2), (8, 1), (1, 8)]:
+        out, _ = _run_cube_with_retry(_cube_tables(raw, 8),
+                                      _cube_spec("triangle", dims),
+                                      use_kernel=use_kernel)
+        outs.append(rows_as_set(out.to_numpy()))
+    assert outs[0] == outs[1] == outs[2] == outs[3]
+    assert outs[0] == rows_as_set(ref_multiway_join(
+        raw, [(1, "rb", "sb"), (2, "ra", "ta")], (("s_c", "t_c"),)))

@@ -1,4 +1,4 @@
-"""Golden-plan snapshot tests: the physical-plan decisions of q1-q34 are
+"""Golden-plan snapshot tests: the physical-plan decisions of q1-q37 are
 pinned in a checked-in JSON fixture so cost-model / planner edits can't
 silently regress them.
 
@@ -9,6 +9,11 @@ Per query, the fixture records:
     test catalog (scale 0.1, p=4, seed 42 — the session fixture),
   * for Reorder(RelJoin) on the mis-ordered planner targets (q13-q15):
     the executed methods — pinning the adaptive DP's chosen order,
+  * for Reorder(RelJoin) on the cyclic queries (q35-q37): the executed
+    methods — pinning whether the hypercube multi-way plan is selected on
+    this catalog's geometry (and, in the same entry, that the default
+    non-reordering strategies still run the binary + residual-eqcol
+    fallback path),
   * the static planner audit: whether ``optimize`` reordered each query and
     the canonical signature of the emitted plan (the DP join order).
 
@@ -29,16 +34,17 @@ import pathlib
 import pytest
 
 from repro.sql import (Executor, RelJoinStrategy, ReorderingStrategy,
-                       all_queries, default_strategies, filtered_queries,
-                       misordered_queries, optimize, skewed_queries,
-                       text_queries)
+                       all_queries, cyclic_queries, default_strategies,
+                       filtered_queries, misordered_queries, optimize,
+                       skewed_queries, text_queries)
 from repro.sql.logical import signature
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "golden_plans.json"
 
-#: q1-q34: baseline + planner-target + skew-target + filter-target suites
+#: q1-q37: baseline + planner-target + skew-target + filter-target suites
 #: plus the text-only SQL queries (q24+, incl. the service suite's
-#: deliberately-overlapping q33/q34).
+#: deliberately-overlapping q33/q34) and the cyclic hypercube targets
+#: (q35-q37, hand-built: their closing edges have no SQL form).
 #: (Skewed queries run on the uniform catalog here: their *selection*
 #: snapshot is the uniform-key one; bench_skew owns the skewed behaviour.)
 
@@ -49,6 +55,7 @@ def golden_queries():
     out.update(skewed_queries())
     out.update(filtered_queries())
     out.update(text_queries())
+    out.update(cyclic_queries())
     return out
 
 
@@ -68,7 +75,7 @@ def build_snapshot(catalog) -> dict:
         for strat in strategies:
             res = Executor(catalog, strat).execute(plan)
             entry["strategies"][strat.name] = _decisions(res)
-        if qname in misordered_queries():
+        if qname in misordered_queries() or qname in cyclic_queries():
             res = Executor(catalog,
                            ReorderingStrategy(RelJoinStrategy())
                            ).execute(plan)
@@ -108,5 +115,5 @@ def test_golden_plans(snapshot):
         assert got["dp"] == exp["dp"], qname
 
 
-def test_snapshot_covers_q1_to_q34(snapshot):
-    assert len(snapshot["queries"]) == 34
+def test_snapshot_covers_q1_to_q37(snapshot):
+    assert len(snapshot["queries"]) == 37

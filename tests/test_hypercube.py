@@ -1,0 +1,231 @@
+"""Hypercube multi-way shuffle join, bottom to top: the cost-model units
+(replication factors, share optimization, the strictly-cheaper selection
+gate), cyclic-core detection, the end-to-end executor path where Algorithm 1
+picks the cube from cost alone on a cyclic query and the result matches the
+forced-binary arm, and the shard_map distributed twin over multi-axis
+meshes. The 8-device twin cases run in the multi-device CI tier
+(XLA_FLAGS=--xla_force_host_platform_device_count=8), whose matrix also
+sets REPRO_MESH_SHAPE={flat,cube} to pin both mesh factorizations of the
+same program; they skip where fewer devices exist.
+"""
+
+import math
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import CostParams, JoinMethod
+from repro.core.selection import select_hypercube
+from repro.core.stats import TableStats
+from repro.joins import from_numpy, partition_round_robin
+from repro.joins.distributed import (dist_hypercube_join, make_cube_mesh,
+                                     place_cube)
+from repro.joins.methods import (HypercubeLink, HypercubeSpec,
+                                 hypercube_multiway_join)
+from repro.joins.ref import ref_multiway_join, rows_as_set
+from repro.sql import Aggregate, Executor, Filter, Join, Scan, cyclic_queries
+from repro.sql.logical import cyclic_core
+from repro.sql.strategies import ReorderingStrategy
+
+PARAMS = CostParams(p=8, w=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cost model units.
+# ---------------------------------------------------------------------------
+
+def test_cube_replication_factors():
+    """f = p / prod(owned shares), down to 1 for all-axis owners and up to
+    p for a relation owning nothing (full broadcast)."""
+    dims = (2, 4)
+    assert cm.cube_replication(dims, [0, 1]) == 1
+    assert cm.cube_replication(dims, [0]) == 4
+    assert cm.cube_replication(dims, [1]) == 2
+    assert cm.cube_replication(dims, []) == 8
+
+
+def test_factorizations_enumerate_all_ordered_shapes():
+    shapes = set(cm._factorizations(8, 2))
+    assert shapes == {(1, 8), (2, 4), (4, 2), (8, 1)}
+    for dims in cm._factorizations(12, 3):
+        assert math.prod(dims) == 12
+
+
+def test_two_relation_flat_cube_reproduces_shuffle_hash():
+    """At f = 1 for two relations the multi-way cost IS Eq. 10's
+    shuffle-hash cost — the binary method is the cube's degenerate case."""
+    sa, sb = 3.2e6, 4.1e5
+    assert cm.hypercube_shuffle_cost([sa, sb], [1.0, 1.0], PARAMS) == (
+        pytest.approx(cm.shuffle_hash_cost(sa, sb, PARAMS)))
+
+
+def test_cube_shares_protect_the_largest_relation():
+    """Triangle memberships: the optimizer gives the big probe's axes the
+    whole budget so its replication factor stays 1."""
+    memberships = [[0, 1], [1, 2], [0, 2]]  # R{a,b}, S{b,c}, T{a,c}
+    sizes = [1e9, 1e6, 1e6]
+    dims = cm.cube_shares(8, 3, memberships, sizes, PARAMS)
+    assert math.prod(dims) == 8
+    assert cm.cube_replication(dims, memberships[0]) == 1
+
+
+def test_binary_interface_refuses_the_multiway_method():
+    """method_cost prices only binary joins; the multi-way member is inf
+    there so no binary selection path can ever pick it by accident."""
+    c = cm.method_cost(JoinMethod.HYPERCUBE_SHUFFLE, 1e6, 1e5, 1e4, 1e3,
+                       PARAMS)
+    assert c == math.inf
+
+
+def test_select_hypercube_strictly_cheaper_gate():
+    stats = [TableStats(1e8, 1e6), TableStats(1e6, 1e4),
+             TableStats(1e6, 1e4)]
+    memberships = [[0, 1], [1, 2], [0, 2]]
+    sel = select_hypercube(stats, memberships, 3, binary_cost=1e12,
+                           params=PARAMS)
+    assert sel is not None and sel.method is JoinMethod.HYPERCUBE_SHUFFLE
+    assert "cyclic core" in sel.reason
+    # Not strictly cheaper -> the binary plan stands.
+    assert select_hypercube(stats, memberships, 3, binary_cost=sel.cost,
+                            params=PARAMS) is None
+    assert select_hypercube(stats, memberships, 3, binary_cost=0.0,
+                            params=PARAMS) is None
+
+
+def test_select_hypercube_distrusts_invalid_statistics():
+    """Paper §4.4: sizes at/above the watermark are not trustworthy; the
+    multi-way quote refuses rather than gamble a p-way replication on
+    them."""
+    bad = [TableStats(float("inf"), 1e6), TableStats(1e6, 1e4),
+           TableStats(1e6, 1e4)]
+    assert select_hypercube(bad, [[0, 1], [1, 2], [0, 2]], 3,
+                            binary_cost=1e18, params=PARAMS) is None
+
+
+# ---------------------------------------------------------------------------
+# Cyclic-core detection.
+# ---------------------------------------------------------------------------
+
+def test_cyclic_core_shapes():
+    tri = [(0, 1), (1, 2), (0, 2)]
+    assert cyclic_core(3, tri) == frozenset({0, 1, 2})
+    # Star and chain strip to nothing.
+    assert cyclic_core(4, [(0, 1), (0, 2), (0, 3)]) == frozenset()
+    assert cyclic_core(4, [(0, 1), (1, 2), (2, 3)]) == frozenset()
+    # A pendant leaf hanging off a triangle is not part of the core.
+    assert cyclic_core(4, tri + [(2, 3)]) == frozenset({0, 1, 2})
+    # A doubled edge is still acyclic: the core is a simple-graph 2-core.
+    assert cyclic_core(2, [(0, 1), (1, 0)]) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: Algorithm 1 picks the cube from cost alone.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cube_catalog():
+    from repro.sql import generate
+    return generate(scale=0.05, p=8, seed=0)
+
+
+def test_q35_cube_selected_from_cost_and_matches_binary(cube_catalog):
+    """The crown jewel: on the cyclic q35 the planner quotes the hypercube
+    against the DP's best binary tree, selects it on relative cost alone
+    (no hints anywhere), the verification gates stay clean, and the row
+    set is identical to the forced-binary arm's."""
+    q = cyclic_queries()["q35_triangle"]
+    hyper = Executor(cube_catalog, ReorderingStrategy(),
+                     verify=True).execute(q)
+    assert [d.selection.method for d in hyper.decisions] == (
+        [JoinMethod.HYPERCUBE_SHUFFLE])
+    assert "cyclic core" in hyper.decisions[0].selection.reason
+    binary = Executor(cube_catalog, ReorderingStrategy(), verify=True,
+                      hypercube=False).execute(q)
+    assert JoinMethod.HYPERCUBE_SHUFFLE not in (
+        [d.selection.method for d in binary.decisions])
+    assert rows_as_set(hyper.table.to_numpy()) == (
+        rows_as_set(binary.table.to_numpy()))
+
+
+def test_two_relation_eqcol_stays_binary(cube_catalog):
+    """An eqcol predicate over an acyclic 2-relation region has no cyclic
+    core: the region runs on the ordinary binary path and the closing
+    equality is applied as a residual filter."""
+    s = Aggregate(Scan("catalog_sales"), "cs_bill_customer_sk",
+                  (("cs_item_sk", "max"),))
+    j = Join(Scan("store_sales"), s, "ss_customer_sk",
+             "cs_bill_customer_sk")
+    f = Filter(j, "ss_item_sk", "eqcol", column2="max_cs_item_sk")
+    q = Aggregate(f, "ss_store_sk", (("ss_quantity", "sum"),))
+    res = Executor(cube_catalog, ReorderingStrategy(), verify=True).execute(q)
+    assert JoinMethod.HYPERCUBE_SHUFFLE not in (
+        [d.selection.method for d in res.decisions])
+    # The residual equality really filtered: survivors obey it.
+    out = res.table.to_numpy()
+    assert all(len(v) == len(next(iter(out.values()))) for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# Distributed twin: shard_map over multi-axis meshes.
+# ---------------------------------------------------------------------------
+
+def _triangle_tables(p):
+    rng = np.random.default_rng(zlib.crc32(b"hc-dist"))
+    r = {"ra": rng.integers(0, 20, 160).astype(np.int32),
+         "rb": rng.integers(0, 24, 160).astype(np.int32),
+         "v": np.arange(160, dtype=np.int32)}
+    s = {"sb": np.arange(24, dtype=np.int32),
+         "s_c": rng.integers(0, 4, 24).astype(np.int32)}
+    t = {"ta": np.arange(20, dtype=np.int32),
+         "t_c": rng.integers(0, 4, 20).astype(np.int32)}
+    tabs = [partition_round_robin(from_numpy(c, capacity=192), p)
+            for c in (r, s, t)]
+    spec = HypercubeSpec(
+        dims=(), axis_keys=(((0, "ra"), (1, "rb")), ((1, "sb"),),
+                            ((0, "ta"),)),
+        links=(HypercubeLink(1, "rb", "sb"), HypercubeLink(2, "ra", "ta")),
+        checks=(("s_c", "t_c"),))
+    want = rows_as_set(ref_multiway_join(
+        (r, s, t), [(1, "rb", "sb"), (2, "ra", "ta")], spec.checks))
+    return tabs, spec, want
+
+
+def _mesh_dims():
+    """The multi-device CI matrix leg: REPRO_MESH_SHAPE=flat pins the
+    degenerate one-axis factorization, cube the genuine 2x4 cube."""
+    return (8, 1) if os.environ.get("REPRO_MESH_SHAPE") == "flat" else (2, 4)
+
+
+def test_dist_twin_single_device_mesh():
+    tabs, spec, want = _triangle_tables(1)
+    import dataclasses
+    spec = dataclasses.replace(spec, dims=(1, 1))
+    mesh = make_cube_mesh((1, 1))
+    placed = tuple(place_cube(t, mesh) for t in tabs)
+    out = dist_hypercube_join(placed, spec, mesh, capacity_factor=16.0)
+    assert rows_as_set(out.to_numpy()) == want
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (multi-device CI tier)")
+def test_dist_twin_matches_global_view_and_oracle():
+    """The shard_map twin on the real 8-device mesh (shape from the CI
+    matrix) equals both the global-view executor path and the numpy
+    oracle — the collectives are a faithful re-expression, not a
+    different algorithm."""
+    import dataclasses
+    dims = _mesh_dims()
+    tabs, spec, want = _triangle_tables(8)
+    spec = dataclasses.replace(spec, dims=dims)
+    mesh = make_cube_mesh(dims)
+    placed = tuple(place_cube(t, mesh) for t in tabs)
+    out = dist_hypercube_join(placed, spec, mesh, capacity_factor=16.0)
+    assert rows_as_set(out.to_numpy()) == want
+    glob, _ = hypercube_multiway_join(list(tabs), spec,
+                                      capacity_factor=16.0)
+    assert rows_as_set(glob.to_numpy()) == want
