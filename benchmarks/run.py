@@ -55,8 +55,9 @@ def _registry():
     relative to any single benchmark run.)"""
     from . import (bench_accuracy, bench_cost_model, bench_filters,
                    bench_hypercube, bench_kernels, bench_psts,
-                   bench_reorder, bench_roofline, bench_service,
-                   bench_skew, bench_strategies, bench_w_sweep)
+                   bench_reorder, bench_reopt, bench_roofline,
+                   bench_service, bench_skew, bench_strategies,
+                   bench_w_sweep)
 
     s = SMOKE_SCALE
     return {
@@ -81,6 +82,8 @@ def _registry():
                  {"scale": s, "zipfs": (0.0, 1.2)}),
         "filters": (bench_filters, {"scale": 0.2}, {"scale": 0.2},
                     {"scale": s}),
+        "reopt": (bench_reopt, {"scale": 0.1}, {"scale": 0.1},
+                  {"scale": s}),
         "service": (bench_service, {"scale": 0.2}, {"scale": 0.1},
                     {"scale": s}),
         "roofline": (bench_roofline, {}, {}, {}),

@@ -43,6 +43,8 @@ __all__ = [
     "zone_map_cost", "semi_join_cost", "bloom_total_cost",
     # the relative-size criterion (Eq. 13)
     "k0_threshold", "relative_size", "broadcast_preferred",
+    # checkpoint re-optimization trigger (PR 10, not in the paper)
+    "DEFAULT_REOPT_QERROR",
 ]
 
 
@@ -581,3 +583,12 @@ def broadcast_preferred(size_a: float, size_b: float, params: CostParams,
     """True iff C_broadcastHash < C_shuffleHash, i.e. k > k0 (paper §3.6.2).
     ``skew`` is the probe-side straggler factor (1.0 = paper's rule)."""
     return relative_size(size_a, size_b) > k0_threshold(params, skew)
+
+
+#: Checkpoint re-optimization trigger: re-plan the remaining join order
+#: when a measured intermediate's cardinality diverges from its estimate
+#: by more than this q-error (max(est/meas, meas/est), one-row-floored).
+#: 3x is loose enough that histogram-backed estimates on uniform data
+#: never trip it and tight enough that compounding-predicate or skew
+#: misestimates (the cases where re-planning flips a method) always do.
+DEFAULT_REOPT_QERROR: float = 3.0

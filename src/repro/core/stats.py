@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+from typing import Callable, Dict, Iterable, Sequence, Tuple
 
 #: Paper §4.4: default watermark = 100 GB.
 DEFAULT_WATERMARK_BYTES: float = 100 * 1024 ** 3
@@ -127,3 +128,264 @@ def estimate_join(left: TableStats, right: TableStats,
 def estimate_group_by(inp: TableStats, groups: float) -> TableStats:
     card = min(inp.cardinality, max(groups, 1.0))
     return TableStats(card * inp.row_bytes, card, StatsSource.ESTIMATED)
+
+
+# ---------------------------------------------------------------------------
+# Per-column statistics: NDV / MCV / equi-depth histograms.
+#
+# The mergeable intermediate is an exact compressed multiset (sorted
+# (value, count) pairs) — per-partition summaries merge by adding counts,
+# so distributed builds are order-, duplicate- and partitioning-invariant
+# by construction, and merge(split(summary, p)) == summary at any p. The
+# finalized ``ColumnStats`` keeps the heaviest values exactly (MCV) and
+# equi-depth buckets over the remainder.
+# ---------------------------------------------------------------------------
+
+#: Most-common values kept exactly per column (counts, not estimates).
+MCV_TOP_K: int = 8
+
+#: Equi-depth buckets over the non-MCV remainder of a column.
+HISTOGRAM_BUCKETS: int = 16
+
+
+def q_error(estimated: float, measured: float) -> float:
+    """The symmetric multiplicative estimation error max(e/m, m/e).
+
+    Both sides are floored at one row so empty relations (and estimates
+    rounding to zero) yield finite, comparable errors: q_error(0, 0) == 1.
+    """
+    e = max(float(estimated), 1.0)
+    m = max(float(measured), 1.0)
+    return max(e / m, m / e)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSummary:
+    """Exact compressed multiset of one column: sorted (value, count) pairs.
+
+    The order- and partitioning-invariant intermediate behind
+    ``ColumnStats``: build each partition's summary independently, merge by
+    adding counts. Values are stored as floats (the engine's columns are
+    int32/float32 — both embed exactly).
+    """
+
+    values: Tuple[float, ...]
+    counts: Tuple[float, ...]
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.counts))
+
+    @property
+    def ndv(self) -> float:
+        return float(len(self.values))
+
+
+def summary_from_pairs(values: Iterable[float],
+                       counts: Iterable[float]) -> ColumnSummary:
+    """Normalize (value, count) pairs into a ``ColumnSummary``: duplicate
+    values merge by adding counts, zero/negative counts drop, pairs sort by
+    value — so any pair order or duplication yields the identical summary."""
+    acc: Dict[float, float] = {}
+    for v, c in zip(values, counts):
+        if c > 0:
+            fv = float(v)
+            acc[fv] = acc.get(fv, 0.0) + float(c)
+    ordered = sorted(acc.items())
+    return ColumnSummary(tuple(v for v, _ in ordered),
+                         tuple(c for _, c in ordered))
+
+
+def build_summary(values: Iterable[float]) -> ColumnSummary:
+    """Summarize a raw value sequence (one partition's column)."""
+    counts: Dict[float, float] = {}
+    for v in values:
+        fv = float(v)
+        counts[fv] = counts.get(fv, 0.0) + 1.0
+    ordered = sorted(counts.items())
+    return ColumnSummary(tuple(v for v, _ in ordered),
+                         tuple(c for _, c in ordered))
+
+
+def merge_summaries(parts: Sequence[ColumnSummary]) -> ColumnSummary:
+    """Exact multiset union of per-partition summaries (any order)."""
+    return summary_from_pairs(
+        [v for s in parts for v in s.values],
+        [c for s in parts for c in s.counts])
+
+
+def filter_summary(summary: ColumnSummary, op: str, value: float = 0.0,
+                   value2: float = 0.0,
+                   values: Sequence[float] = ()) -> ColumnSummary:
+    """The exact multiset surviving one predicate, engine semantics:
+    ``between`` inclusive on both ends, ``in`` an OR of equalities."""
+    keep = _predicate(op, value, value2, values)
+    pairs = [(v, c) for v, c in zip(summary.values, summary.counts)
+             if keep(v)]
+    return ColumnSummary(tuple(v for v, _ in pairs),
+                         tuple(c for _, c in pairs))
+
+
+def _predicate(op: str, value: float, value2: float,
+               values: Sequence[float]) -> Callable[[float], bool]:
+    members = {float(v) for v in values}
+    table = {
+        "eq": lambda v: v == value,
+        "ne": lambda v: v != value,
+        "lt": lambda v: v < value,
+        "le": lambda v: v <= value,
+        "gt": lambda v: v > value,
+        "ge": lambda v: v >= value,
+        "between": lambda v: value <= v <= value2,
+        "in": lambda v: v in members,
+    }
+    if op not in table:
+        raise ValueError(f"unknown filter op {op}")
+    return table[op]
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnStats:
+    """Finalized per-column statistics: row count, NDV, the top-K most
+    common values with exact counts, and equi-depth buckets
+    ``(lo, hi, rows, ndv)`` — bounds inclusive — over the remainder.
+    ``integral`` marks integer-valued columns (point predicates on
+    non-integers estimate zero)."""
+
+    count: float
+    ndv: float
+    mcv: Tuple[Tuple[float, float], ...]
+    buckets: Tuple[Tuple[float, float, float, float], ...]
+    integral: bool = True
+
+    def fraction(self, op: str, value: float = 0.0, value2: float = 0.0,
+                 values: Sequence[float] = ()) -> float:
+        """Estimated kept fraction of one predicate; 0.0 on empty input."""
+        if self.count <= 0:
+            return 0.0
+        n = self.count
+        if op == "eq":
+            return _clamp01(self._eq_rows(value) / n)
+        if op == "ne":
+            return _clamp01(1.0 - self._eq_rows(value) / n)
+        if op == "lt":
+            return _clamp01(self._lt_rows(value) / n)
+        if op == "le":
+            return _clamp01(self._le_rows(value) / n)
+        if op == "gt":
+            return _clamp01(1.0 - self._le_rows(value) / n)
+        if op == "ge":
+            return _clamp01(1.0 - self._lt_rows(value) / n)
+        if op == "between":
+            return _clamp01(
+                (self._le_rows(value2) - self._lt_rows(value)) / n)
+        if op == "in":
+            return _clamp01(
+                sum(self._eq_rows(v) for v in {float(v) for v in values})
+                / n)
+        raise ValueError(f"unknown filter op {op}")
+
+    def _eq_rows(self, value: float) -> float:
+        v = float(value)
+        for mv, mc in self.mcv:
+            if mv == v:
+                return mc
+        if self.integral and not v.is_integer():
+            return 0.0
+        for lo, hi, rows, ndv in self.buckets:
+            if lo <= v <= hi:
+                return rows / max(ndv, 1.0)
+        return 0.0
+
+    def _le_rows(self, value: float) -> float:
+        """Rows with column value <= ``value`` (MCV exact + bucket
+        interpolation: discrete-uniform within integral buckets, linear
+        within float buckets)."""
+        v = float(value)
+        rows = sum(mc for mv, mc in self.mcv if mv <= v)
+        for lo, hi, cnt, _ in self.buckets:
+            if v >= hi:
+                rows += cnt
+            elif v >= lo:
+                if self.integral:
+                    width = hi - lo + 1.0
+                    rows += cnt * (math.floor(v) - lo + 1.0) / width
+                else:
+                    rows += cnt * (v - lo) / max(hi - lo, 1e-30)
+        return rows
+
+    def _lt_rows(self, value: float) -> float:
+        v = float(value)
+        rows = sum(mc for mv, mc in self.mcv if mv < v)
+        for lo, hi, cnt, _ in self.buckets:
+            if v > hi:
+                rows += cnt
+            elif v > lo:
+                if self.integral:
+                    width = hi - lo + 1.0
+                    rows += cnt * (math.ceil(v) - lo) / width
+                else:
+                    rows += cnt * (v - lo) / max(hi - lo, 1e-30)
+        return rows
+
+
+def _clamp01(x: float) -> float:
+    return min(max(x, 0.0), 1.0)
+
+
+def column_stats_from_summary(summary: ColumnSummary,
+                              integral: bool = True,
+                              mcv_k: int = MCV_TOP_K,
+                              n_buckets: int = HISTOGRAM_BUCKETS
+                              ) -> ColumnStats:
+    """Finalize a summary: peel off the top ``mcv_k`` values by count
+    (ties broken by value — deterministic under any build order), then cut
+    the remainder into at most ``n_buckets`` equi-depth buckets."""
+    n = summary.total
+    if n <= 0:
+        return ColumnStats(0.0, 0.0, (), (), integral)
+    pairs = list(zip(summary.values, summary.counts))
+    by_weight = sorted(pairs, key=lambda vc: (-vc[1], vc[0]))
+    mcv = tuple(by_weight[:mcv_k])
+    mcv_values = {v for v, _ in mcv}
+    rest = [(v, c) for v, c in pairs if v not in mcv_values]
+    buckets: list[Tuple[float, float, float, float]] = []
+    if rest:
+        rem = sum(c for _, c in rest)
+        # Close a bucket once it holds one equi-depth share; depth balances
+        # to within one value's count, deterministically (rest is sorted).
+        target = rem / max(n_buckets, 1)
+        lo = rest[0][0]
+        rows = 0.0
+        ndv = 0.0
+        for i, (v, c) in enumerate(rest):
+            rows += c
+            ndv += 1.0
+            if rows >= target or i == len(rest) - 1:
+                buckets.append((lo, v, rows, ndv))
+                rows = 0.0
+                ndv = 0.0
+                if i + 1 < len(rest):
+                    lo = rest[i + 1][0]
+    return ColumnStats(n, summary.ndv, mcv, tuple(buckets), integral)
+
+
+def split_summary(summary: ColumnSummary, p: int) -> Tuple[ColumnSummary, ...]:
+    """Round-robin the expanded multiset across ``p`` parts — the test
+    helper for the merge(split(h)) ≡ h invariant (not a data path)."""
+    parts: Tuple[Dict[float, float], ...] = tuple({} for _ in range(p))
+    i = 0
+    for v, c in zip(summary.values, summary.counts):
+        whole = int(c)
+        for _ in range(whole):
+            part = parts[i % p]
+            part[v] = part.get(v, 0.0) + 1.0
+            i += 1
+        frac = float(c) - whole
+        if frac > 0:
+            part = parts[i % p]
+            part[v] = part.get(v, 0.0) + frac
+            i += 1
+    return tuple(
+        summary_from_pairs(tuple(d.keys()), tuple(d.values()))
+        for d in parts)

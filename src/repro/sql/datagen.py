@@ -15,6 +15,8 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from ..core.stats import (ColumnStats, ColumnSummary,
+                          column_stats_from_summary)
 from ..joins.table import Table, from_numpy, partition_round_robin
 
 
@@ -43,6 +45,14 @@ class Catalog:
     tables: Dict[str, Table]
     p: int
     key_domains: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: Per-column NDV / MCV / equi-depth-histogram statistics
+    #: (``core.stats.ColumnStats``), computed by ``generate`` from the
+    #: unpartitioned data. Column names are globally unique across the
+    #: star schema, so one flat map covers every table. Empty on
+    #: hand-built catalogs — every estimator treats a missing entry as
+    #: "no histogram" and falls back to the declared/domain fractions.
+    column_stats: Dict[str, ColumnStats] = dataclasses.field(
+        default_factory=dict)
     version: int = dataclasses.field(
         default_factory=lambda: next(_CATALOG_VERSIONS))
     uid: str = dataclasses.field(
@@ -188,7 +198,24 @@ def generate(scale: float = 1.0, p: int = 8, seed: int = 0,
     domains = {col: float(n[dim]) for col, dim in FK_DIMENSIONS.items()}
     domains.update({pk: float(n[t]) for t, pk in PRIMARY_KEYS.items()})
     return Catalog({k: partition_round_robin(t, p)
-                    for k, t in tables.items()}, p, key_domains=domains)
+                    for k, t in tables.items()}, p, key_domains=domains,
+                   column_stats=compute_column_stats(tables))
+
+
+def compute_column_stats(tables: Dict[str, Table]) -> Dict[str, ColumnStats]:
+    """Exact per-column statistics from unpartitioned tables: one
+    ``np.unique`` pass per column feeds the compressed-multiset summary,
+    finalized into NDV / MCV / equi-depth buckets."""
+    stats: Dict[str, ColumnStats] = {}
+    for t in tables.values():
+        for col, arr in t.to_numpy().items():
+            a = np.asarray(arr)
+            vals, counts = np.unique(a, return_counts=True)
+            summary = ColumnSummary(tuple(float(v) for v in vals),
+                                    tuple(float(c) for c in counts))
+            stats[col] = column_stats_from_summary(
+                summary, integral=bool(np.issubdtype(a.dtype, np.integer)))
+    return stats
 
 
 #: fact FK column -> the dimension whose PK domain it draws from. Feeds

@@ -21,12 +21,12 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
-from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod, filter_reduce_cost,
-                               runtime_filter_cost)
+from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY,
+                               DEFAULT_REOPT_QERROR, CostParams, JoinMethod,
+                               filter_reduce_cost, runtime_filter_cost)
 from ..core.selection import JoinProperties, JoinType, Selection
 from ..core.stats import (StatsSource, TableStats, estimate_filter,
-                          estimate_group_by, estimate_join)
+                          estimate_group_by, estimate_join, q_error)
 from ..joins.aggregate import group_aggregate
 from ..joins.exchange import key_skew
 from ..joins.methods import (HypercubeLink, HypercubeSpec, JoinReport,
@@ -36,22 +36,23 @@ from .datagen import Catalog
 from .logical import (Aggregate, Filter, Join, JoinEdge, Node, Project,
                       RuntimeFilter, Scan, augment_edges,
                       effective_selectivity, extract_join_graph,
-                      key_retain_fraction, leaf_columns,
-                      leaf_retain_fraction, signature)
+                      key_retain_fraction, leaf_columns, signature)
 from .plan_analysis import (PlanVerificationError, Violation, analyze_plan,
                             audit_exchanges, audit_filter_decision,
                             audit_selection, catalog_dtypes, check_cache_reuse,
                             check_cache_store, check_filter_placement,
-                            check_filter_quote, check_replan_step,
-                            check_schema_preserved)
+                            check_filter_quote, check_reopt_decision,
+                            check_replan_step, check_schema_preserved)
 from .planner import (JoinStep, catalog_base_stats, catalog_schema,
                       enumerate_join_order, leaf_key_domain,
                       modeled_tree_cost, plan_hypercube,
                       plan_runtime_filters, prune_projections,
-                      push_down_filters)
+                      push_down_filters, semi_match_fraction,
+                      stats_retain_fraction)
 from .runtime_filters import (DEFAULT_FILTER_KINDS, build_filter_payload,
-                              filter_cache_key, predicate_chain,
-                              probe_filter_mask)
+                              chain_stats_key, filter_cache_key,
+                              predicate_chain, probe_filter_mask)
+from .selectivity import derive_selectivity
 from .strategies import Strategy
 
 #: Shuffle-family methods: both sides cross the wire, so a probe-side
@@ -157,6 +158,41 @@ class FilterDecision:
 
 
 @dataclasses.dataclass
+class CardinalityRecord:
+    """Estimated-vs-measured cardinality at one exchange boundary (the
+    estimator-accuracy audit trail the q-error harness asserts over)."""
+
+    kind: str        # "join" | "aggregate"
+    estimated: float
+    measured: float
+
+    @property
+    def q_error(self) -> float:
+        """Symmetric relative error, one-row-floored (``core.stats``)."""
+        return q_error(self.estimated, self.measured)
+
+
+@dataclasses.dataclass
+class ReoptDecision:
+    """Audit record of one checkpoint re-optimization decision.
+
+    Emitted at every region exchange boundary of a reopt-enabled run,
+    triggered or not — plan-analysis rule R2 audits the discipline:
+    ``triggered`` iff the recomputed q-error exceeds the threshold, and a
+    non-triggered checkpoint must leave the continuation untouched
+    (``new_next == old_next``)."""
+
+    boundary: int            # 0-based join index within the region
+    estimated: TableStats    # the optimizer's predicted intermediate
+    measured: TableStats     # the materialized intermediate, measured
+    threshold: float         # the executor's q-error trigger
+    q_error: float           # max(est/meas, meas/est), one-row-floored
+    triggered: bool
+    old_next: Optional[int]  # next build leaf under the unfolded stats
+    new_next: Optional[int]  # next build leaf after the checkpoint
+
+
+@dataclasses.dataclass
 class ExecutionResult:
     table: Table
     decisions: List[JoinDecision]
@@ -169,6 +205,11 @@ class ExecutionResult:
     straggler_bytes: float = 0.0
     #: Runtime filters (any kind) that were planned and applied, in order.
     filters: List["FilterDecision"] = dataclasses.field(default_factory=list)
+    #: Checkpoint re-optimization audit trail (reopt-enabled runs only).
+    reopts: List["ReoptDecision"] = dataclasses.field(default_factory=list)
+    #: Estimated-vs-measured cardinality at every join/aggregate boundary.
+    cardinalities: List["CardinalityRecord"] = dataclasses.field(
+        default_factory=list)
 
     def methods(self):
         return [d.selection.method for d in self.decisions]
@@ -201,6 +242,17 @@ class ExecutionResult:
         through shuffle-family exchanges."""
         return sum(d.probe_shuffle_bytes for d in self.decisions)
 
+    @property
+    def max_q_error(self) -> float:
+        """Worst estimated-vs-measured divergence across all boundaries
+        (1.0 when nothing was recorded — a perfect, if vacuous, score)."""
+        return max((c.q_error for c in self.cardinalities), default=1.0)
+
+    @property
+    def reopt_count(self) -> int:
+        """How many checkpoints actually triggered a re-optimization."""
+        return sum(1 for r in self.reopts if r.triggered)
+
 
 @dataclasses.dataclass
 class _Annotated:
@@ -216,7 +268,9 @@ class Executor:
                  compact: bool = True, reorder: Optional[bool] = None,
                  verify: Optional[bool] = None,
                  hypercube: Optional[bool] = None,
-                 intermediates: Optional[Dict[str, Table]] = None):
+                 intermediates: Optional[Dict[str, Table]] = None,
+                 reopt: Optional[bool] = None,
+                 reopt_qerror: Optional[float] = None):
         self.catalog = catalog
         self.strategy = strategy
         self.adaptive = adaptive
@@ -260,6 +314,17 @@ class Executor:
         # before/while executing; violations raise PlanVerificationError.
         self.verify = (getattr(strategy, "verify", False)
                        if verify is None else verify)
+        # Checkpoint mid-query re-optimization: at every region exchange
+        # boundary the materialized intermediate's measured cardinality is
+        # compared against the optimizer's prediction; past the q-error
+        # threshold the measured stats are folded into the remaining join
+        # graph and the System-R DP re-runs on the remainder. Off by
+        # default — non-reopt runs are byte-identical to PR 9.
+        self.reopt = (getattr(strategy, "reopt", False)
+                      if reopt is None else reopt)
+        self.reopt_qerror = (getattr(strategy, "reopt_qerror",
+                                     DEFAULT_REOPT_QERROR)
+                             if reopt_qerror is None else reopt_qerror)
         # Cross-query CSE injection (QueryService): pre-computed tables for
         # shared exchange-rooted subtrees, keyed on ``logical.signature``.
         # ``_eval`` returns them in place of re-executing the subtree.
@@ -276,6 +341,8 @@ class Executor:
     def execute(self, plan: Node) -> ExecutionResult:
         self._decisions: List[JoinDecision] = []
         self._filters: List[FilterDecision] = []
+        self._reopts: List[ReoptDecision] = []
+        self._cards: List[CardinalityRecord] = []
         if self.filter_cache is not None:
             # Bind the cache to this catalog: entries built against any
             # other catalog version are invalidated before planning.
@@ -302,7 +369,8 @@ class Executor:
         strag = sum(d.straggler_bytes for d in self._decisions)
         return ExecutionResult(ann.table, self._decisions, dt, net, loc,
                                ann.table.count(), straggler_bytes=strag,
-                               filters=self._filters)
+                               filters=self._filters, reopts=self._reopts,
+                               cardinalities=self._cards)
 
     def _gate(self, violations: List[Violation]) -> None:
         if violations:
@@ -341,8 +409,11 @@ class Executor:
             child = self._eval(node.child)
             t = _apply_filter(child.table, node)
             # In-stage operator: runtime stats are *propagated estimates*
-            # from the last materialization (paper §4.1 step 2).
-            sel = effective_selectivity(node)
+            # from the last materialization (paper §4.1 step 2). The
+            # catalog's per-column histograms, when present, beat both the
+            # declared selectivity and the uniform-domain fractions.
+            sel = derive_selectivity(node, self.catalog.key_domains,
+                                     self.catalog.column_stats or None)
             measured = estimate_filter(child.measured, sel)
             est = estimate_filter(child.estimated, sel)
             return _Annotated(t, measured, est)
@@ -385,7 +456,8 @@ class Executor:
                     spill = before.table.with_valid(before.table.valid
                                                     & ~left.table.valid)
             out = self._join(left, right, lstats, rstats, node.left_key,
-                             node.right_key, node.join_type, node.hint)
+                             node.right_key, node.join_type, node.hint,
+                             retain=self._retain(node.right))
             if spill is not None:
                 out = self._pad_outer_rows(out, spill)
             return out
@@ -397,11 +469,28 @@ class Executor:
             if self.compact:
                 out = compact_partitions(out)
             measured = out.measure()
-            est = estimate_group_by(child.estimated,
-                                    measured.cardinality or 1)
+            cs = self.catalog.column_stats.get(node.key)
+            if cs is not None and cs.count > 0:
+                # Group-count estimate from the catalog's measured NDV —
+                # a genuine prediction, so it enters the q-error trail.
+                est = estimate_group_by(child.estimated, max(cs.ndv, 1.0))
+                self._cards.append(CardinalityRecord(
+                    "aggregate", est.cardinality, measured.cardinality))
+            else:
+                # No histogram for the group key (hand-built catalogs,
+                # derived columns): fall back to the measured group count —
+                # not a prediction, so it stays out of the q-error trail.
+                est = estimate_group_by(child.estimated,
+                                        measured.cardinality or 1)
             return _Annotated(out, measured, est)
 
         raise TypeError(f"unknown plan node {type(node)}")
+
+    def _retain(self, leaf: Node) -> float:
+        """Histogram-aware kept fraction of a build subtree's filter chain
+        (the planner's ``stats_retain_fraction`` under this catalog)."""
+        return stats_retain_fraction(leaf, self.catalog.key_domains,
+                                     self.catalog.column_stats or None)
 
     # -- runtime bloom-filter pushdown -----------------------------------------
 
@@ -413,7 +502,20 @@ class Executor:
         fraction when no domain is known (e.g. aggregated subqueries from
         sources without header FK metadata) — key-aware so a filter on an
         aggregate's group key, above or below the grouping, still counts
-        (group keys survive grouping)."""
+        (group keys survive grouping).
+
+        When the cross-query ``FilterCache`` holds *measured* build-side
+        stats for this leaf's predicate chain (stored alongside every
+        payload it caches), those replace a merely-estimated ``stat`` —
+        a warm cache makes the sigma estimate runtime-accurate even for a
+        static (non-adaptive) executor. Runtime-sourced stats are already
+        measured and are never overridden."""
+        if (self.filter_cache is not None
+                and stat.source is not StatsSource.RUNTIME):
+            cached = self.filter_cache.measured_build_stats(
+                chain_stats_key(leaf, build_key))
+            if cached is not None:
+                stat = cached
         domain = self.catalog.key_domains.get(build_key)
         if domain is None:
             domain = leaf_key_domain(leaf, self._base_stats)
@@ -443,7 +545,7 @@ class Executor:
                                               padded=padded)
                        + check_filter_quote(plan[0]))
         left = self._apply_runtime_filter(plan[0], left, right.table,
-                                          node.right, rstats)
+                                          node.right)
         return left, self._boundary_stats(left, node.left)
 
     def _region_filters(self, graph, anns, stats, edges):
@@ -475,7 +577,7 @@ class Executor:
             # reusing it would drop rows that only this query excludes).
             anns[rf.probe] = self._apply_runtime_filter(
                 rf, anns[rf.probe], anns[rf.build].table,
-                graph.leaves[rf.build], stats[rf.build],
+                graph.leaves[rf.build],
                 cacheable=rf.build not in masked)
             masked.add(rf.probe)
             stats[rf.probe] = self._boundary_stats(anns[rf.probe],
@@ -484,7 +586,6 @@ class Executor:
 
     def _apply_runtime_filter(self, rf: RuntimeFilter, probe: _Annotated,
                               build: Table, build_leaf: Node,
-                              build_stats: TableStats,
                               cacheable: bool = True) -> _Annotated:
         """Build (or fetch from the cross-query cache) the planned filter
         kind and mask the probe table (no false negatives: only rows that
@@ -522,7 +623,13 @@ class Executor:
                     self._gate(check_cache_store(
                         predicate_chain(build_leaf),
                         build_masked=not cacheable))
-                self.filter_cache.store(ck, payload, build_stats)
+                # Store the *materialized* build table's measurement, not
+                # the planner's ``build_stats`` quote: the payload was
+                # just built from the real rows, so the true cardinality
+                # is free — and in a static run the quote is merely
+                # ESTIMATED, which the cache's RUNTIME guard (rightly)
+                # refuses to treat as a measurement.
+                self.filter_cache.store(ck, payload, build.measure())
         keep = probe_filter_mask(rf, payload,
                                  probe.table.column(rf.probe_key))
         table = probe.table.with_valid(probe.table.valid & keep)
@@ -540,7 +647,8 @@ class Executor:
 
     def _join(self, left: _Annotated, right: _Annotated,
               lstats: TableStats, rstats: TableStats, lk: str, rk: str,
-              join_type: JoinType, hint) -> _Annotated:
+              join_type: JoinType, hint,
+              retain: float = 1.0) -> _Annotated:
         """Select (per strategy) + execute one physical join; audit it."""
         # Distribution properties: a side already hash-partitioned on its
         # join key gets its shuffle elided by the engine, so the model's
@@ -583,7 +691,24 @@ class Executor:
         self._decisions.append(JoinDecision(sel, lstats, rstats, rep,
                                             props=props))
         measured = out.measure()
-        est = estimate_join(left.estimated, right.estimated)
+        # FK->PK output estimate, scaled by the build side's histogram
+        # retain fraction (mirrors estimate_leaf_stats): INNER narrows
+        # the probe by retain; semi keeps the domain-coverage match
+        # fraction (build NDV over probe-key domain), anti its
+        # complement; outer joins keep every probe row.
+        if join_type in (JoinType.LEFT_SEMI, JoinType.LEFT_ANTI):
+            sigma = semi_match_fraction(right.estimated, lk,
+                                        self.catalog.key_domains, retain)
+            frac = (sigma if join_type is JoinType.LEFT_SEMI
+                    else max(1.0 - sigma, 0.0))
+            est = left.estimated.scaled(frac)
+        elif join_type is JoinType.INNER:
+            est = estimate_join(left.estimated, right.estimated,
+                                fk_selectivity=retain)
+        else:
+            est = estimate_join(left.estimated, right.estimated)
+        self._cards.append(CardinalityRecord("join", est.cardinality,
+                                             measured.cardinality))
         return _Annotated(out, measured, est)
 
     def _pad_outer_rows(self, ann: _Annotated, spill: Table) -> _Annotated:
@@ -643,11 +768,18 @@ class Executor:
         intermediate statistics, not just the next method re-selected. The
         written order is kept whenever the DP cannot model a strictly
         cheaper one.
+
+        Checkpoint re-optimization (``reopt=True``) adds a divergence
+        audit at every boundary: the materialized intermediate's measured
+        cardinality is compared against the optimizer's prediction, and
+        past the q-error threshold the measured stats are folded into the
+        remaining join graph and the DP re-runs on the remainder — even
+        when the written (left-deep) order was standing until then.
         """
         anns = [self._eval(leaf) for leaf in graph.leaves]
         stats = [self._boundary_stats(a, l)
                  for a, l in zip(anns, graph.leaves)]
-        retain = [leaf_retain_fraction(l) for l in graph.leaves]
+        retain = [self._retain(l) for l in graph.leaves]
         edges = augment_edges(graph)
         if self.runtime_filters:
             # Sideways information passing: filters built from selective
@@ -657,30 +789,109 @@ class Executor:
             anns, stats = self._region_filters(graph, anns, stats, edges)
         if not self.reorder:
             # Filter-only strategies keep the written join order.
-            return self._exec_region_tree(graph.tree, graph, anns)
+            return self._exec_region_tree(graph.tree, graph, anns, retain)
         plan_cost = modeled_tree_cost(graph, stats, retain, self._params)
         order = enumerate_join_order(stats, retain, edges, self._params)
-        if order is None or not order.cost < plan_cost * (1 - 1e-9):
-            return self._exec_region_tree(graph.tree, graph, anns)
-        cur = anns[order.first]
-        cur_stats = stats[order.first]
-        joined = {order.first}
-        fallback = [s.build for s in order.steps]
+        use_dp = order is not None and order.cost < plan_cost * (1 - 1e-9)
+        written = (self._linear_steps(graph)
+                   if self.reopt and not use_dp else None)
+        if not use_dp and written is None:
+            # Written order stands and no checkpointing is possible (reopt
+            # off, or a bushy written tree): execute the tree as-is.
+            return self._exec_region_tree(graph.tree, graph, anns, retain)
+        if use_dp:
+            first = order.first
+            fallback = [(s.build, None) for s in order.steps]
+        else:
+            first, fallback = written
+        # Until a checkpoint triggers, a standing written order is executed
+        # verbatim (no step-wise re-plan: that could silently deviate from
+        # the order the DP just declared non-improvable).
+        replanning = use_dp
+        cur = anns[first]
+        cur_stats = stats[first]
+        joined = {first}
+        boundary = 0
         while len(joined) < graph.n:
             rest = [i for i in range(graph.n) if i not in joined]
-            step = (self._replan_step(cur_stats, joined, rest, stats, retain,
-                                      edges)
-                    or self._fallback_step(fallback, joined, edges))
+            step = (self._replan_step(cur_stats, joined, rest, stats,
+                                      retain, edges)
+                    if replanning else None)
+            if step is None:
+                step = self._fallback_step(fallback, joined, edges)
             if self.verify:
                 # R1: adaptive re-plans only follow real join-graph edges.
                 self._gate(check_replan_step(step, joined, edges))
             b = step.build
+            # What the optimizer believes this boundary will produce —
+            # the estimate the checkpoint audits against.
+            predicted = estimate_join(cur_stats, stats[b],
+                                      fk_selectivity=retain[b])
             cur = self._join(cur, anns[b], cur_stats, stats[b],
                              step.probe_key, step.build_key, JoinType.INNER,
-                             None)
+                             None, retain=retain[b])
             joined.add(b)
-            cur_stats = cur.measured if self.adaptive else cur.estimated
+            next_stats = cur.measured if self.adaptive else cur.estimated
+            if self.reopt:
+                q = q_error(predicted.cardinality,
+                            cur.measured.cardinality)
+                triggered = q > self.reopt_qerror
+                # Continuation under the *unfolded* policy, for the audit
+                # trail (R2: a non-trigger must not change it).
+                old_next = self._peek_next(replanning, next_stats, joined,
+                                           stats, retain, edges, fallback)
+                if triggered:
+                    # Checkpoint: the intermediate is already materialized
+                    # (every boundary materializes); fold its measured
+                    # stats into the remaining join graph and re-run the
+                    # DP on the remainder.
+                    next_stats = cur.measured
+                    replanning = True
+                    new_next = self._peek_next(True, next_stats, joined,
+                                               stats, retain, edges,
+                                               fallback)
+                else:
+                    new_next = old_next
+                dec = ReoptDecision(boundary, predicted, cur.measured,
+                                    self.reopt_qerror, q, triggered,
+                                    old_next, new_next)
+                if self.verify:
+                    # R2: trigger iff threshold exceeded; non-triggered
+                    # checkpoints leave the continuation untouched.
+                    self._gate(check_reopt_decision(dec))
+                self._reopts.append(dec)
+            cur_stats = next_stats
+            boundary += 1
         return cur
+
+    def _linear_steps(self, graph):
+        """``(first leaf, [(build leaf, edge), ...])`` of a left-deep
+        written region tree — the step form checkpoint re-optimization
+        needs to audit a standing written order. None when the written
+        tree is bushy (the tree path executes it unchanged)."""
+        steps = []
+        t = graph.tree
+        while not isinstance(t, int):
+            if not isinstance(t[1], int):
+                return None
+            steps.append((t[1], graph.edges[t[2]]))
+            t = t[0]
+        steps.reverse()
+        return t, steps
+
+    def _peek_next(self, replanning, cur_stats, joined, stats, retain,
+                   edges, fallback) -> Optional[int]:
+        """Build leaf the current policy would join next (None = region
+        done) — pure lookahead, consumes nothing."""
+        if len(joined) >= len(stats):
+            return None
+        rest = [i for i in range(len(stats)) if i not in joined]
+        step = (self._replan_step(cur_stats, joined, rest, stats, retain,
+                                  edges)
+                if replanning else None)
+        if step is None:
+            step = self._fallback_step(fallback, joined, edges)
+        return step.build
 
     def _replan_step(self, cur_stats, joined, rest, stats, retain, edges):
         """Re-enumerate the remaining join order from the current
@@ -707,26 +918,33 @@ class Executor:
                         s.method, s.cost)
 
     def _fallback_step(self, fallback, joined, edges):
-        """Next feasible leaf from the statically enumerated order."""
-        for b in fallback:
+        """Next feasible step from the static ``(build, edge)`` order: a
+        written order carries its own tree edge; DP orders (edge None)
+        take the first live join-graph edge for that build."""
+        for b, e in fallback:
             if b in joined:
                 continue
-            for e in edges:
-                if e.build == b and e.probe in joined:
-                    return JoinStep(b, e.probe_key, e.build_key, None, 0.0)
+            if e is not None and e.probe in joined:
+                return JoinStep(b, e.probe_key, e.build_key, None, 0.0)
+            for ed in edges:
+                if ed.build == b and ed.probe in joined:
+                    return JoinStep(b, ed.probe_key, ed.build_key, None,
+                                    0.0)
         raise RuntimeError("no feasible join step left in region")
 
-    def _exec_region_tree(self, tree, graph, anns) -> _Annotated:
+    def _exec_region_tree(self, tree, graph, anns,
+                          retain: List[float]) -> _Annotated:
         """Execute a region in its written order (leaves pre-evaluated)."""
         if isinstance(tree, int):
             return anns[tree]
-        left = self._exec_region_tree(tree[0], graph, anns)
-        right = self._exec_region_tree(tree[1], graph, anns)
+        left = self._exec_region_tree(tree[0], graph, anns, retain)
+        right = self._exec_region_tree(tree[1], graph, anns, retain)
         e = graph.edges[tree[2]]
         lstats = self._region_stats(left, tree[0], graph)
         rstats = self._region_stats(right, tree[1], graph)
+        r = retain[tree[1]] if isinstance(tree[1], int) else 1.0
         return self._join(left, right, lstats, rstats, e.probe_key,
-                          e.build_key, JoinType.INNER, None)
+                          e.build_key, JoinType.INNER, None, retain=r)
 
     def _region_stats(self, ann, tree, graph) -> TableStats:
         if isinstance(tree, int):
@@ -771,7 +989,7 @@ class Executor:
         anns = [self._eval(leaf) for leaf in graph.leaves]
         stats = [self._boundary_stats(a, leaf)
                  for a, leaf in zip(anns, graph.leaves)]
-        retain = [leaf_retain_fraction(leaf) for leaf in graph.leaves]
+        retain = [self._retain(leaf) for leaf in graph.leaves]
         binary = modeled_tree_cost(graph, stats, retain, self._params)
         order = enumerate_join_order(stats, retain, augment_edges(graph),
                                      self._params)

@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Tuple
 from ..core.cost_model import CostParams, JoinMethod
 from ..core.selection import (JoinProperties, JoinType, Selection,
                               select_join_method)
-from ..core.stats import TableStats
+from ..core.stats import TableStats, q_error as _q_error
 from ..joins.aggregate import AGG_OPS as _AGG_OPS
 from .logical import (ARBITRARY as _ARBITRARY, Aggregate, Distribution,
                       Filter, Join, Node, Project, RuntimeFilter, Scan,
@@ -59,8 +59,9 @@ __all__ = [
     "analyze_plan", "audit_exchanges", "audit_filter_decision",
     "audit_join_decision", "audit_selection", "catalog_dtypes",
     "check_cache_reuse", "check_cache_store", "check_filter_placement",
-    "check_filter_quote", "check_replan_step", "check_schema_preserved",
-    "infer_properties", "main", "verify_execution",
+    "check_filter_quote", "check_reopt_decision", "check_replan_step",
+    "check_schema_preserved", "infer_properties", "main",
+    "verify_execution",
 ]
 
 
@@ -138,6 +139,12 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
          "remaining leaf along a real join-graph edge (probe endpoint "
          "already joined, matching keys) — the BuildRight contract "
          "survives re-planning."),
+    Rule("R2_REOPT_DISCIPLINE", "error",
+         "Every checkpoint re-optimization decision is disciplined: it "
+         "triggers iff the recomputed estimated-vs-measured q-error "
+         "exceeds the recorded threshold, and a non-triggered checkpoint "
+         "leaves the planned continuation untouched (new_next == "
+         "old_next) — re-planning may only be bought with evidence."),
 )}
 
 
@@ -456,6 +463,35 @@ def check_replan_step(step, joined, edges,
                f"oriented into the joined set {sorted(joined)} matches")]
 
 
+def check_reopt_decision(dec, path: str = "reopt") -> List[Violation]:
+    """R2: checkpoint re-optimization discipline over one decision.
+
+    The trigger is recomputed from the recorded estimated/measured
+    cardinalities (``core.stats.q_error``) and must match both the
+    recorded ``q_error`` and the ``triggered`` flag against the recorded
+    threshold; a non-triggered checkpoint must not have changed the
+    continuation — the re-planned subtree must stay consistent with the
+    live join graph's next step."""
+    out: List[Violation] = []
+    q = _q_error(dec.estimated.cardinality, dec.measured.cardinality)
+    if not math.isclose(q, dec.q_error, rel_tol=_REL_TOL, abs_tol=1e-9):
+        out.append(_v("R2_REOPT_DISCIPLINE", path,
+                      f"recorded q-error {dec.q_error:.3f} != recomputed "
+                      f"{q:.3f} (est={dec.estimated.cardinality:.0f}, "
+                      f"meas={dec.measured.cardinality:.0f})"))
+    elif dec.triggered != (q > dec.threshold):
+        out.append(_v("R2_REOPT_DISCIPLINE", path,
+                      f"triggered={dec.triggered} but q-error {q:.3f} vs "
+                      f"threshold {dec.threshold:g} says "
+                      f"{q > dec.threshold}"))
+    if not dec.triggered and dec.new_next != dec.old_next:
+        out.append(_v("R2_REOPT_DISCIPLINE", path,
+                      f"checkpoint did not trigger yet changed the "
+                      f"continuation (next build {dec.old_next!r} -> "
+                      f"{dec.new_next!r})"))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Pass 3: cost-model audit over emitted decisions.
 # ---------------------------------------------------------------------------
@@ -629,6 +665,8 @@ def verify_execution(result, params: CostParams) -> List[Violation]:
         out += audit_join_decision(d, params, path=f"join#{i}")
     for i, f in enumerate(result.filters):
         out += audit_filter_decision(f, path=f"filter#{i}[{f.plan.kind}]")
+    for i, r in enumerate(getattr(result, "reopts", ()) or ()):
+        out += check_reopt_decision(r, path=f"reopt#{i}")
     return out
 
 
@@ -678,6 +716,9 @@ def main(argv=None) -> int:
         queries = {n: queries[n] for n in names}
     strategies = default_strategies() + [
         ReorderingStrategy(RelJoinStrategy()),
+        # Checkpoint re-optimization arm: every boundary's ReoptDecision
+        # runs through the R2 gate inline (verify=True below).
+        ReorderingStrategy(RelJoinStrategy(), reopt=True),
         FilteredStrategy(RelJoinStrategy()),
         FilteredStrategy(ReorderingStrategy(RelJoinStrategy())),
         SkewAwareStrategy(),

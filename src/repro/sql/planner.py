@@ -33,7 +33,7 @@ from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
                                method_cost)
 from ..core.selection import (JoinProperties, JoinType, Selection,
                               select_hypercube, select_join_method)
-from ..core.stats import (DEFAULT_WATERMARK_BYTES, TableStats,
+from ..core.stats import (DEFAULT_WATERMARK_BYTES, ColumnStats, TableStats,
                           estimate_filter, estimate_group_by, estimate_join,
                           estimate_project)
 from .datagen import Catalog, catalog_fingerprint
@@ -67,42 +67,61 @@ def catalog_base_stats(catalog: Catalog) -> Dict[str, TableStats]:
 
 def estimate_leaf_stats(node: Node, base_stats: Dict[str, TableStats],
                         schema: Schema,
-                        key_domains: Optional[Dict[str, float]] = None
+                        key_domains: Optional[Dict[str, float]] = None,
+                        column_stats: Optional[Dict[str, ColumnStats]] = None
                         ) -> TableStats:
     """Statically propagate (size, cardinality) through a leaf subtree.
 
-    Filter selectivity is op-aware: a declared ``Filter.selectivity`` wins,
+    Filter selectivity is op-aware: a per-column histogram
+    (``column_stats``, e.g. ``Catalog.column_stats``) wins when it covers
+    the filter's column; otherwise a declared ``Filter.selectivity`` wins,
     and underived filters (parsed SQL) get ``derive_selectivity``'s
     schema-derived fraction — ``between``/``eq``/``in`` on columns with
     known domains estimate their true kept fraction instead of a blanket
     0.5. ``key_domains`` (e.g. ``Catalog.key_domains``) refines key-column
-    lookups; the static schema domains are the fallback."""
+    lookups; the static schema domains are the fallback. With histograms,
+    aggregate group counts come from the group key's NDV and join output
+    cardinalities from histogram-backed retain fractions instead of the
+    fixed ``DEFAULT_GROUP_FRACTION`` / declared-only retains."""
     if isinstance(node, Scan):
         return base_stats[node.table]
     if isinstance(node, Filter):
         return estimate_filter(
-            estimate_leaf_stats(node.child, base_stats, schema, key_domains),
-            derive_selectivity(node, key_domains))
+            estimate_leaf_stats(node.child, base_stats, schema, key_domains,
+                                column_stats),
+            derive_selectivity(node, key_domains, column_stats))
     if isinstance(node, Project):
         child = estimate_leaf_stats(node.child, base_stats, schema,
-                                    key_domains)
+                                    key_domains, column_stats)
         n_child = max(len(leaf_columns(node.child, schema)), 1)
         return estimate_project(child, len(node.columns) / n_child)
     if isinstance(node, Aggregate):
         child = estimate_leaf_stats(node.child, base_stats, schema,
-                                    key_domains)
+                                    key_domains, column_stats)
         groups = max(child.cardinality * DEFAULT_GROUP_FRACTION, 1.0)
+        if column_stats is not None:
+            cs = column_stats.get(node.key)
+            if cs is not None and cs.count > 0:
+                groups = max(cs.ndv, 1.0)
         return estimate_group_by(child, groups)
     if isinstance(node, Join):
         left = estimate_leaf_stats(node.left, base_stats, schema,
-                                   key_domains)
+                                   key_domains, column_stats)
         right = estimate_leaf_stats(node.right, base_stats, schema,
-                                    key_domains)
-        retain = leaf_retain_fraction(node.right)
+                                    key_domains, column_stats)
+        retain = stats_retain_fraction(node.right, key_domains, column_stats)
         if node.join_type in (JoinType.LEFT_SEMI, JoinType.LEFT_ANTI):
-            # Output keeps probe columns only; anti is the complement.
-            frac = (retain if node.join_type is JoinType.LEFT_SEMI
-                    else max(1.0 - retain, 0.0))
+            # Output keeps probe columns only; anti is the complement. The
+            # match fraction is domain coverage: the build side's distinct
+            # keys (its cardinality, by the unique-build-key contract —
+            # histogram NDV for aggregate builds) over the probe key's
+            # domain. A full-table build then correctly predicts the anti
+            # residue of never-referenced keys, which no filter-retain
+            # product can see.
+            sigma = semi_match_fraction(right, node.left_key, key_domains,
+                                        retain)
+            frac = (sigma if node.join_type is JoinType.LEFT_SEMI
+                    else max(1.0 - sigma, 0.0))
             card = left.cardinality * frac
             return TableStats(card * left.row_bytes, card)
         if node.join_type in (JoinType.LEFT_OUTER, JoinType.RIGHT_OUTER,
@@ -111,6 +130,39 @@ def estimate_leaf_stats(node: Node, base_stats: Dict[str, TableStats],
             return estimate_join(left, right)
         return estimate_join(left, right, fk_selectivity=retain)
     raise TypeError(f"unknown plan node {type(node)}")
+
+
+def stats_retain_fraction(node: Node,
+                          key_domains: Optional[Dict[str, float]] = None,
+                          column_stats: Optional[Dict[str, ColumnStats]]
+                          = None) -> float:
+    """Histogram-aware twin of ``logical.leaf_retain_fraction``: the
+    fraction of a build leaf's key domain surviving its filter chain,
+    with each filter's fraction taken from the column's histogram when one
+    exists. Without ``column_stats`` it reproduces the declared/derived
+    fractions exactly."""
+    base, filters = filter_chain(node)
+    frac = 1.0
+    for f in filters:
+        frac *= min(max(derive_selectivity(f, key_domains, column_stats),
+                        0.0), 1.0)
+    if isinstance(base, Project):
+        frac *= stats_retain_fraction(base.child, key_domains, column_stats)
+    return frac
+
+
+def semi_match_fraction(build: TableStats, probe_key: str,
+                        key_domains: Optional[Dict[str, float]],
+                        retain: float) -> float:
+    """Fraction of probe rows a semi join keeps: the build side's distinct
+    keys (its estimated cardinality — the engine's unique-build-key
+    contract makes cardinality ≈ NDV) over the probe key's domain. Falls
+    back to the build chain's filter-retain fraction when the probe key
+    has no known domain."""
+    domain = key_domains.get(probe_key) if key_domains else None
+    if domain is not None and domain > 0:
+        return min(max(build.cardinality, 0.0) / domain, 1.0)
+    return min(max(retain, 0.0), 1.0)
 
 
 def _step(probe: TableStats, build: TableStats, params: CostParams,
@@ -698,20 +750,22 @@ class PlanCache:
 
 def modeled_plan_cost(plan: Node, base_stats: Dict[str, TableStats],
                       schema: Schema, params: CostParams,
-                      key_domains: Optional[Dict[str, float]] = None
+                      key_domains: Optional[Dict[str, float]] = None,
+                      column_stats: Optional[Dict[str, ColumnStats]] = None
                       ) -> float:
     """Modeled workload of a whole plan: the Eq. 4/8/10 sum of Algorithm 1's
     best feasible method over every join, with statistics statically
-    propagated by ``estimate_leaf_stats``. This is the admission
-    controller's cost quote — a dimensionless relative workload comparable
-    across queries against the same catalog, not a latency prediction."""
+    propagated by ``estimate_leaf_stats`` (histogram-backed when
+    ``column_stats`` is given). This is the admission controller's cost
+    quote — a dimensionless relative workload comparable across queries
+    against the same catalog, not a latency prediction."""
     total = 0.0
     for node in (plan, *_descendants(plan)):
         if isinstance(node, Join):
             probe = estimate_leaf_stats(node.left, base_stats, schema,
-                                        key_domains)
+                                        key_domains, column_stats)
             build = estimate_leaf_stats(node.right, base_stats, schema,
-                                        key_domains)
+                                        key_domains, column_stats)
             total += _step(probe, build, params)[1]
     return total
 
@@ -793,6 +847,8 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
         plan = prune_projections(plan, schema)
 
     regions: List[RegionDecision] = []
+    key_domains = catalog.key_domains if catalog is not None else None
+    column_stats = catalog.column_stats if catalog is not None else None
 
     def rewrite(node: Node) -> Node:
         if reorder and isinstance(node, Join):
@@ -802,12 +858,15 @@ def optimize(plan: Node, catalog: Optional[Catalog] = None, *,
                 # under an Aggregate): rewrite them first.
                 leaves = [rewrite(l) for l in graph.leaves]
                 try:
-                    stats = [estimate_leaf_stats(l, base_stats, schema)
+                    stats = [estimate_leaf_stats(l, base_stats, schema,
+                                                 key_domains, column_stats)
                              for l in leaves]
                 except KeyError:
                     stats = None
                 if stats is not None:
-                    retain = [leaf_retain_fraction(l) for l in leaves]
+                    retain = [stats_retain_fraction(l, key_domains,
+                                                    column_stats)
+                              for l in leaves]
                     plan_cost = modeled_tree_cost(graph, stats, retain,
                                                   params)
                     order = enumerate_join_order(stats, retain,

@@ -57,7 +57,7 @@ from ..core.cost_model import (CostParams, SEMI_JOIN_BITS_PER_KEY,
                                bloom_total_cost, filtered_probe_fraction,
                                semi_join_cost, zone_map_cost)
 from ..core.psts import key_set, semi_join_mask
-from ..core.stats import TableStats
+from ..core.stats import StatsSource, TableStats
 from ..joins.table import Table
 from ..kernels.bloom import bloom_build, bloom_probe
 from ..kernels.zone_map import key_range, range_probe
@@ -242,6 +242,21 @@ def filter_cache_key(leaf: Node, build_key: str, kind: str, m_bits: int,
     return (table, preds, build_key, kind, m_bits, k)
 
 
+def chain_stats_key(leaf: Node, build_key: str) -> Optional[tuple]:
+    """Kind-independent identity of a build leaf's surviving key set —
+    ``filter_cache_key`` minus the payload shape. Two payload-distinct
+    cache entries (different kind or size) built over the same leaf chain
+    measured the *same* build side, so the cache indexes its measured
+    build-side stats by this key: a warm cache can then seed the planner's
+    sigma estimate for any later query scanning the same chain, whatever
+    filter kind that query ends up planning."""
+    chain = predicate_chain(leaf)
+    if chain is None:
+        return None
+    table, preds = chain
+    return (table, preds, build_key)
+
+
 @dataclasses.dataclass
 class _CacheEntry:
     payload: object            # the built filter (a jax pytree)
@@ -279,6 +294,12 @@ class FilterCache:
 
     def __init__(self) -> None:
         self._entries: Dict[tuple, _CacheEntry] = {}
+        # Measured build-side stats by chain identity (``chain_stats_key``:
+        # the entry key minus kind/shape) — the planner-facing side table
+        # that seeds sigma estimates on warm runs. Only RUNTIME-sourced
+        # stats enter: an estimated stat must never masquerade as a
+        # measurement.
+        self._chain_stats: Dict[tuple, TableStats] = {}
         self._catalog_fingerprint: Optional[tuple] = None
         self.hits = 0
         self.misses = 0
@@ -298,6 +319,7 @@ class FilterCache:
             if self._entries:
                 self.invalidations += 1
             self._entries.clear()
+            self._chain_stats.clear()
             self._catalog_fingerprint = fingerprint
 
     def contains(self, key: Optional[tuple]) -> bool:
@@ -320,8 +342,16 @@ class FilterCache:
         """Record a freshly built payload (no-op for uncacheable keys)."""
         if key is not None:
             self._entries[key] = _CacheEntry(payload, build_stats)
+            if build_stats.source is StatsSource.RUNTIME:
+                self._chain_stats[key[:3]] = build_stats
 
     def build_stats(self, key: Optional[tuple]) -> Optional[TableStats]:
         """Measured build-side stats recorded with a cached payload."""
         entry = self._entries.get(key) if key is not None else None
         return entry.build_stats if entry is not None else None
+
+    def measured_build_stats(self, key: Optional[tuple]
+                             ) -> Optional[TableStats]:
+        """Runtime-measured build-side stats for a ``chain_stats_key`` —
+        the warm-cache sigma seed (None when cold or never measured)."""
+        return self._chain_stats.get(key) if key is not None else None

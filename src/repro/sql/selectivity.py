@@ -9,9 +9,16 @@ columns), so an op-specific fraction is exact, not a guess — ``d_month eq
 6`` is 1/12 under the 360-day calendar, ``ss_quantity lt 10`` is 9/99,
 ``i_category in (1,3,5)`` is 3/10.
 
-Declared selectivity, when present, always wins: :func:`derive_selectivity`
-returns it untouched, so hand-tuned plans keep their numbers and the
-binder/estimator only fill the gaps.
+Since PR 10 the estimator can also consult *measured* per-column
+statistics (``Catalog.column_stats``: NDV / MCV / equi-depth histograms
+from ``core.stats``). A histogram, when one covers the filter's column,
+wins over both the declared selectivity and the domain fractions: the
+parsed-SQL binder bakes a domain-derived estimate into every ``Filter``
+it emits, so data-driven estimates must take precedence over declared
+ones to ever bite — and a measured histogram is strictly better
+information than either. Without stats (hand-built catalogs, unknown
+columns) the old precedence stands: declared selectivity wins, then
+domain fractions, then ``DEFAULT_SELECTIVITY``.
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ from __future__ import annotations
 import math
 from typing import Mapping, Optional
 
+from ..core.stats import ColumnStats
 from . import datagen
 from .logical import Filter
 
@@ -89,25 +97,36 @@ def _float_fraction(f: Filter, lo: float, hi: float) -> float:
 
 
 def derive_selectivity(f: Filter,
-                       key_domains: Optional[Mapping[str, float]] = None
-                       ) -> float:
+                       key_domains: Optional[Mapping[str, float]] = None,
+                       column_stats: Optional[Mapping[str, ColumnStats]]
+                       = None) -> float:
     """Selectivity estimate for one Filter.
 
-    Declared wins: an explicit ``f.selectivity`` is returned as-is. For
-    underived filters the column's domain is looked up — payload/date
-    columns in ``COLUMN_DOMAINS``, key columns in ``key_domains`` (e.g. a
-    live ``Catalog.key_domains``) falling back to the static
-    ``STATIC_KEY_DOMAINS`` — and the op-specific kept fraction computed.
-    Unknown columns get ``DEFAULT_SELECTIVITY``.
+    A per-column histogram (``column_stats``, keyed by column name) wins
+    when it covers the filter's column: its MCV/equi-depth fraction is the
+    measured answer, overriding even a declared ``f.selectivity`` (the
+    binder bakes domain estimates into every parsed filter — see the
+    module docstring). Otherwise declared wins, then the column's domain
+    is looked up — payload/date columns in ``COLUMN_DOMAINS``, key columns
+    in ``key_domains`` (e.g. a live ``Catalog.key_domains``) falling back
+    to the static ``STATIC_KEY_DOMAINS`` — and the op-specific kept
+    fraction computed. Unknown columns get ``DEFAULT_SELECTIVITY``.
     """
+    if f.op == "eqcol":
+        # Column-to-column equality: no literal to intersect with a domain
+        # or histogram. Declared wins; otherwise two independent uniform
+        # columns over a shared domain of n values match with probability
+        # 1/n — but the estimator has no join-aware domain here, so keep
+        # the conservative default.
+        if f.selectivity is not None:
+            return f.selectivity
+        return DEFAULT_SELECTIVITY
+    if column_stats is not None:
+        cs = column_stats.get(f.column)
+        if cs is not None and cs.count > 0:
+            return _clamp(cs.fraction(f.op, f.value, f.value2, f.values))
     if f.selectivity is not None:
         return f.selectivity
-    if f.op == "eqcol":
-        # Column-to-column equality: no literal to intersect with a domain.
-        # Two independent uniform columns over a shared domain of n values
-        # match with probability 1/n — but the estimator has no join-aware
-        # domain here, so keep the conservative default.
-        return DEFAULT_SELECTIVITY
     dom = datagen.COLUMN_DOMAINS.get(f.column)
     if dom is None:
         n = None

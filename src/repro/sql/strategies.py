@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY, CostParams,
-                               JoinMethod)
+from ..core.cost_model import (BLOOM_DEFAULT_BITS_PER_KEY,
+                               DEFAULT_REOPT_QERROR, CostParams, JoinMethod)
 from ..core.selection import (JoinProperties, Selection, select_absolute_size,
                               select_forced, select_join_method)
 from ..core.stats import DEFAULT_WATERMARK_BYTES, TableStats
@@ -34,6 +34,14 @@ class Strategy:
     #: verified against the static rule set before/while running, and any
     #: violation raises ``PlanVerificationError`` naming the rule.
     verify: bool = False
+    #: When True the Executor checkpoints every region exchange boundary:
+    #: the materialized intermediate's measured cardinality is audited
+    #: against the optimizer's prediction, and past ``reopt_qerror`` the
+    #: measured stats are folded into the remaining join graph and the
+    #: System-R DP re-runs on the remainder (mid-query re-optimization).
+    reopt: bool = False
+    #: q-error threshold arming the checkpoint above.
+    reopt_qerror: float = DEFAULT_REOPT_QERROR
 
     def select(self, left: TableStats, right: TableStats,
                props: JoinProperties, p: int) -> Selection:
@@ -130,9 +138,15 @@ class ReorderingStrategy(Strategy):
     #: strategy's w (when it has one) so the DP optimizes the same
     #: objective the per-join selections use.
     w: float | None = None
+    #: Checkpoint mid-query re-optimization (see ``Strategy.reopt``); a
+    #: reordering concern, so the knob lives on this wrapper.
+    reopt: bool = False
+    reopt_qerror: float = DEFAULT_REOPT_QERROR
 
     def __post_init__(self):
         self.name = f"Reorder({self.inner.name})"
+        if self.reopt:
+            self.name += "+reopt"
         self.reorder = True
         # Forward the wrapped strategy's executor-facing flags: without
         # these, Reorder(SkewAware(...)) would silently lose skew handling
@@ -197,6 +211,9 @@ class FilteredStrategy(Strategy):
         self.skew_aware = getattr(self.inner, "skew_aware", False)
         self.skew_floor = getattr(self.inner, "skew_floor", 1.1)
         self.verify = getattr(self.inner, "verify", False)
+        self.reopt = getattr(self.inner, "reopt", False)
+        self.reopt_qerror = getattr(self.inner, "reopt_qerror",
+                                    DEFAULT_REOPT_QERROR)
         self.w = getattr(self.inner, "w", 1.0)
 
     def select(self, left, right, props, p):

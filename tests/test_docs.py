@@ -119,6 +119,29 @@ def test_serving_doc_covers_every_public_name():
         "service name needs a place in the lifecycle doc")
 
 
+def test_architecture_links_to_statistics():
+    """The architecture page must point readers at the statistics /
+    checkpoint-re-optimization page (the PR-10 subsystem doc)."""
+    arch = (DOCS / "architecture.md").read_text()
+    assert "](statistics.md)" in arch, (
+        "docs/architecture.md no longer links to docs/statistics.md")
+
+
+def test_statistics_doc_covers_the_stats_surface():
+    """docs/statistics.md backticks every load-bearing statistics name:
+    the shapes, the estimator entry points, and the re-opt machinery."""
+    doc = (DOCS / "statistics.md").read_text()
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_.]*)`", doc))
+    required = {"ColumnSummary", "ColumnStats", "column_stats_from_summary",
+                "build_summary", "merge_summaries", "filter_summary",
+                "q_error", "derive_selectivity", "stats_retain_fraction",
+                "ReoptDecision", "CardinalityRecord", "R2_REOPT_DISCIPLINE",
+                "MCV_TOP_K", "HISTOGRAM_BUCKETS"}
+    missing = required - documented
+    assert not missing, (
+        f"docs/statistics.md is missing {sorted(missing)}")
+
+
 def test_architecture_links_to_serving():
     """The single-query architecture page must point readers at the
     multi-tenant serving page (and the link must resolve, which

@@ -1,0 +1,165 @@
+"""The estimator-accuracy harness: every golden query (q1–q37), run under
+the reordering RelJoin strategy, must keep its worst estimated-vs-measured
+cardinality q-error at every exchange boundary under a documented ceiling.
+
+The ceilings are *claims*, not slack: most queries sit at 1.0x–1.2x
+because their filters, group-bys and joins are all histogram-covered
+(``Catalog.column_stats``). The few documented outliers say exactly what
+the estimator cannot see — a regression that pushes any query past its
+ceiling means an estimator path lost its histogram backing.
+
+Also here: the cross-query ``FilterCache`` seeding regression — measured
+build-side stats stored with cached payloads make a *static* executor's
+sigma estimates runtime-accurate (the quote changes; the rows never do).
+"""
+
+import pytest
+
+from repro.joins.ref import rows_as_set
+from repro.sql import (Executor, FilterCache, FilteredStrategy,
+                       RelJoinStrategy, ReorderingStrategy, all_queries,
+                       cyclic_queries, filtered_queries, misordered_queries,
+                       skewed_queries, text_queries)
+from repro.sql.logical import Filter, Join, Scan
+
+#: Default worst-boundary q-error ceiling: estimates within 1.5x of
+#: measured at every exchange boundary.
+DEFAULT_CEILING = 1.5
+
+#: Documented exceptions, with the estimator blind spot each one names.
+#: Measured worst q-errors (scale 0.1, p=4, seed 42) in parentheses.
+CEILINGS = {
+    # Aggregate-over-aggregate: the outer group key's NDV histogram
+    # describes the base table, not the inner aggregate's output (2.70).
+    "q4_agg_agg": 3.5,
+    # Fact-fact join: independence assumption on two Zipf fact tables
+    # sharing a key — correlation the per-column histograms can't carry
+    # (1.66).
+    "q13_fact_fact_first": 2.0,
+    # Cyclic closers: hypercube regions finish with eqcol predicates
+    # (col = col), which have no per-column histogram form — they fall
+    # back to the declared closing selectivity (60 / 12 / 60).
+    "q35_triangle": 75.0,
+    "q36_triangle_shared_axis": 16.0,
+    "q37_four_clique": 75.0,
+}
+
+
+def golden_queries():
+    out = dict(all_queries())
+    out.update(misordered_queries())
+    out.update(skewed_queries())
+    out.update(filtered_queries())
+    out.update(text_queries())
+    out.update(cyclic_queries())
+    return out
+
+
+@pytest.mark.parametrize("qname", sorted(golden_queries()))
+def test_worst_boundary_q_error_under_ceiling(catalog, qname):
+    plan = golden_queries()[qname]
+    ex = Executor(catalog, strategy=ReorderingStrategy(RelJoinStrategy()),
+                  verify=True)
+    res = ex.execute(plan)
+    ceiling = CEILINGS.get(qname, DEFAULT_CEILING)
+    assert res.cardinalities, f"{qname} recorded no exchange boundaries"
+    worst = res.max_q_error
+    assert worst <= ceiling, (
+        f"{qname}: worst boundary q-error {worst:.3f} exceeds the "
+        f"documented ceiling {ceiling} — an estimator path lost its "
+        "histogram backing")
+
+
+def test_most_queries_are_near_exact(catalog):
+    """The headline claim behind the histogram tentpole: with per-column
+    statistics the *bulk* of the suite estimates within 1.2x at every
+    boundary — not just under the per-query ceilings."""
+    strategy = ReorderingStrategy(RelJoinStrategy())
+    near_exact = 0
+    queries = golden_queries()
+    for qname, plan in queries.items():
+        res = Executor(catalog, strategy=strategy).execute(plan)
+        if res.max_q_error <= 1.2:
+            near_exact += 1
+    assert near_exact >= 30, (
+        f"only {near_exact}/{len(queries)} queries estimate within 1.2x — "
+        "histogram coverage regressed broadly")
+
+
+def test_every_record_is_a_genuine_prediction(catalog):
+    """Cardinality records must come from the estimated channel, never
+    echo the measurement: under an inflated est_error the static
+    estimates move, proving no record is measured-as-estimated."""
+    plan = golden_queries()["q1_star3"]
+    strategy = ReorderingStrategy(RelJoinStrategy())
+    honest = Executor(catalog, strategy=strategy, adaptive=False)
+    skewed = Executor(catalog, strategy=strategy, adaptive=False,
+                      est_error=3.0)
+    r1, r2 = honest.execute(plan), skewed.execute(plan)
+    assert [c.measured for c in r1.cardinalities] == \
+        [c.measured for c in r2.cardinalities]
+    assert any(a.estimated != b.estimated
+               for a, b in zip(r1.cardinalities, r2.cardinalities))
+
+
+# -- FilterCache measured-stats seeding (the PR's bugfix satellite) ---------
+
+
+def _filtered_join_plan():
+    """store_sales ⋈ (item filtered to i_item_sk < 150): selective build
+    side, so the runtime-filter planner quotes (and applies) a filter."""
+    return Join(Scan("store_sales"),
+                Filter(Scan("item"), "i_item_sk", "lt", 150.0),
+                "ss_item_sk", "i_item_sk")
+
+
+def test_warm_cache_seeds_static_sigma_estimates(catalog):
+    """A static (adaptive=False) executor with a deliberately inflated
+    est_error quotes runtime filters off wrong sigma estimates — unless
+    the cross-query FilterCache already holds the *measured* build-side
+    stats for the same predicate chain, in which case the sigma estimate
+    snaps to runtime-accurate. Only the quote changes: rows are identical
+    warm vs cold."""
+    plan = _filtered_join_plan()
+    cache = FilterCache()
+    warm_strategy = FilteredStrategy(RelJoinStrategy(), cache=cache)
+
+    # Cold static run: sigma comes from the (inflated) estimated stats.
+    cold = Executor(catalog, strategy=FilteredStrategy(RelJoinStrategy()),
+                    adaptive=False, est_error=2.5).execute(plan)
+    assert cold.filters, "scenario must plan a runtime filter"
+
+    # Adaptive run primes the cache with measured build-side stats.
+    primed = Executor(catalog, strategy=warm_strategy).execute(plan)
+    assert primed.filters
+
+    # Warm static run: same inflated est_error, but the cached measured
+    # stats win — the sigma estimate matches the adaptive run's.
+    warm = Executor(catalog, strategy=warm_strategy, adaptive=False,
+                    est_error=2.5).execute(plan)
+    assert warm.filters
+    assert warm.filters[0].plan.sigma_est == \
+        pytest.approx(primed.filters[0].plan.sigma_est)
+    assert warm.filters[0].plan.sigma_est != \
+        pytest.approx(cold.filters[0].plan.sigma_est)
+
+    # The estimate is the only thing that moved.
+    assert warm.rows == cold.rows == primed.rows
+    assert rows_as_set(warm.table.to_numpy()) == \
+        rows_as_set(cold.table.to_numpy())
+
+
+def test_cold_cache_changes_nothing(catalog):
+    """An empty cache is inert: quotes and rows are byte-identical to the
+    cache-free strategy."""
+    plan = _filtered_join_plan()
+    uncached = Executor(catalog,
+                        strategy=FilteredStrategy(RelJoinStrategy()),
+                        adaptive=False, est_error=2.5).execute(plan)
+    fresh = Executor(catalog,
+                     strategy=FilteredStrategy(RelJoinStrategy(),
+                                               cache=FilterCache()),
+                     adaptive=False, est_error=2.5).execute(plan)
+    assert [f.plan for f in fresh.filters] == \
+        [f.plan for f in uncached.filters]
+    assert fresh.rows == uncached.rows

@@ -1,0 +1,184 @@
+"""Per-column histogram statistics: distributed-build invariance and
+estimator-fraction correctness (``repro.core.stats``).
+
+The contract mirrors the runtime-filter kinds' distributed-equivalence
+tests (``test_distributed_filters.py``): a ``ColumnSummary`` is a pure
+function of the value *multiset*, so per-partition builds merged in any
+order — at any device count — equal the global build exactly, and
+``ColumnStats.fraction`` answers every predicate op consistently with the
+exact reference ``filter_summary``.
+"""
+
+import numpy as np
+import pytest
+
+from helpers.hypothesis_compat import given, settings
+from helpers.hypothesis_compat import strategies as st
+from repro.core.stats import (HISTOGRAM_BUCKETS, MCV_TOP_K, ColumnStats,
+                              ColumnSummary, build_summary,
+                              column_stats_from_summary, filter_summary,
+                              merge_summaries, q_error, split_summary,
+                              summary_from_pairs)
+
+
+def _values(seed=11, n=4000, domain=300):
+    """Zipf-skewed integer column: heavy MCVs + a long uniform tail."""
+    rng = np.random.default_rng(seed)
+    zipf = np.minimum(rng.zipf(1.3, n // 2), domain)
+    tail = rng.integers(1, domain + 1, n - n // 2)
+    return np.concatenate([zipf, tail]).astype(np.int64)
+
+
+# -- build/merge invariance -------------------------------------------------
+
+
+def test_build_is_order_invariant():
+    vals = _values()
+    shuffled = vals.copy()
+    np.random.default_rng(0).shuffle(shuffled)
+    assert build_summary(vals) == build_summary(shuffled)
+
+
+def test_summary_from_pairs_normalizes_duplicates_and_drops_nonpositive():
+    a = summary_from_pairs([3.0, 1.0, 3.0, 2.0], [2.0, 1.0, 5.0, 0.0])
+    b = summary_from_pairs([1.0, 3.0], [1.0, 7.0])
+    assert a == b
+    assert a.values == (1.0, 3.0)
+    assert a.counts == (1.0, 7.0)
+
+
+def test_merge_equals_global_build_any_grouping():
+    vals = _values()
+    whole = build_summary(vals)
+    for cuts in ([1000], [700, 1300, 3999], list(range(500, 4000, 500))):
+        parts = [build_summary(chunk)
+                 for chunk in np.split(vals, cuts)]
+        assert merge_summaries(parts) == whole
+        assert merge_summaries(list(reversed(parts))) == whole
+
+
+@pytest.mark.parametrize("p", [1, 8])
+def test_merge_of_split_roundtrips(p):
+    """merge(split(h, p)) ≡ h — partition-count invariance {1, 8}, the
+    same contract the distributed filter builds pin."""
+    whole = build_summary(_values())
+    assert merge_summaries(list(split_summary(whole, p))) == whole
+
+
+def test_merge_is_idempotent_on_singletons():
+    whole = build_summary(_values(seed=5, n=512))
+    assert merge_summaries([whole]) == whole
+
+
+# -- finalization determinism ----------------------------------------------
+
+
+def test_finalize_is_deterministic_and_bounded():
+    stats = column_stats_from_summary(build_summary(_values()))
+    again = column_stats_from_summary(build_summary(_values()))
+    assert stats == again
+    assert len(stats.mcv) <= MCV_TOP_K
+    assert len(stats.buckets) <= HISTOGRAM_BUCKETS
+    # MCVs are the true top-K by count (value tie-break), exact counts.
+    vals = _values()
+    uniq, counts = np.unique(vals, return_counts=True)
+    by_weight = sorted(zip(uniq, counts), key=lambda vc: (-vc[1], vc[0]))
+    assert stats.mcv == tuple((float(v), float(c))
+                              for v, c in by_weight[:MCV_TOP_K])
+
+
+def test_buckets_partition_the_non_mcv_mass():
+    vals = _values()
+    stats = column_stats_from_summary(build_summary(vals))
+    mcv_rows = sum(c for _, c in stats.mcv)
+    bucket_rows = sum(rows for _, _, rows, _ in stats.buckets)
+    assert mcv_rows + bucket_rows == pytest.approx(len(vals))
+    # Buckets are ordered, non-overlapping, bounds inclusive.
+    for (lo, hi, rows, ndv) in stats.buckets:
+        assert lo <= hi and rows > 0 and ndv > 0
+    for (_, hi, _, _), (lo2, _, _, _) in zip(stats.buckets,
+                                             stats.buckets[1:]):
+        assert hi < lo2
+
+
+# -- empty relation ---------------------------------------------------------
+
+
+def test_empty_relation_estimates_zero():
+    empty = build_summary([])
+    assert empty.total == 0.0
+    stats = column_stats_from_summary(empty)
+    assert stats == ColumnStats(0.0, 0.0, (), (), True)
+    for op in ("eq", "ne", "lt", "le", "gt", "ge", "between", "in"):
+        assert stats.fraction(op, 1.0, 2.0, (1.0, 2.0)) == 0.0
+    assert filter_summary(empty, "le", 10.0).total == 0.0
+
+
+# -- estimator fractions vs the exact reference -----------------------------
+
+
+@pytest.mark.parametrize("op,args", [
+    ("eq", (17.0, 0.0, ())),
+    ("eq", (1.0, 0.0, ())),          # the heaviest MCV — exact hit
+    ("ne", (1.0, 0.0, ())),
+    ("lt", (40.0, 0.0, ())),
+    ("le", (40.0, 0.0, ())),
+    ("gt", (200.0, 0.0, ())),
+    ("ge", (200.0, 0.0, ())),
+    ("between", (25.0, 180.0, ())),
+    ("in", (0.0, 0.0, (1.0, 2.0, 999.0))),
+])
+def test_fraction_tracks_exact_reference(op, args):
+    """The histogram's fractional answer stays within a small q-error of
+    the exact multiset answer — and is exact for MCV hits."""
+    vals = _values()
+    summary = build_summary(vals)
+    stats = column_stats_from_summary(summary)
+    value, value2, values = args
+    est = stats.fraction(op, value, value2, values) * summary.total
+    exact = filter_summary(summary, op, value, value2, values).total
+    assert q_error(est, exact) <= 1.35, (op, args, est, exact)
+
+
+def test_mcv_point_lookup_is_exact():
+    vals = _values()
+    summary = build_summary(vals)
+    stats = column_stats_from_summary(summary)
+    for v, c in stats.mcv:
+        assert stats.fraction("eq", v) * summary.total == pytest.approx(c)
+
+
+def test_integral_rejects_non_integer_point_predicates():
+    stats = column_stats_from_summary(build_summary(_values()),
+                                      integral=True)
+    assert stats.fraction("eq", 17.5) == 0.0
+    assert stats.fraction("in", values=(17.5, 0.25)) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=400),
+       st.integers(min_value=0, max_value=10_000))
+def test_range_fractions_are_monotone_and_clamped(domain, seed):
+    """Property: le-fractions are monotone in the threshold and always in
+    [0, 1]; complement ops agree (fraction(gt) == 1 - fraction(le))."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, domain + 1, 600)
+    stats = column_stats_from_summary(build_summary(vals))
+    prev = 0.0
+    for cut in np.linspace(0, domain + 1, 9):
+        f = stats.fraction("le", float(cut))
+        assert 0.0 <= f <= 1.0
+        assert f >= prev - 1e-12
+        assert stats.fraction("gt", float(cut)) == pytest.approx(1.0 - f)
+        prev = f
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=8))
+def test_distributed_finalize_equals_global(p):
+    """Finalizing the merged per-partition summaries is identical to
+    finalizing the global build — stats never depend on row placement."""
+    whole = build_summary(_values(seed=23, n=1500, domain=120))
+    parts = split_summary(whole, p)
+    assert (column_stats_from_summary(merge_summaries(list(parts)))
+            == column_stats_from_summary(whole))

@@ -19,12 +19,14 @@ from repro.sql import (Executor, FilterCache, FilteredStrategy,
                        skewed_queries, verify_execution)
 from repro.sql.logical import (Aggregate, Filter, Join, JoinEdge, Project,
                                RuntimeFilter, Scan)
+from repro.sql.executor import ReoptDecision
 from repro.sql.plan_analysis import (RULES, audit_exchanges,
                                      audit_join_decision, audit_selection,
                                      catalog_dtypes, check_cache_reuse,
                                      check_cache_store,
                                      check_filter_placement,
                                      check_filter_quote, check_replan_step,
+                                     check_reopt_decision,
                                      check_schema_preserved,
                                      infer_properties)
 from repro.sql.planner import JoinStep, catalog_schema
@@ -213,6 +215,28 @@ def test_r1_replan_broken_edge():
     # Right leaf, wrong keys.
     assert _rules(check_replan_step(JoinStep(1, "fk", "pk2", None, 0.0),
                                     {0}, edges)) == {"R1_REPLAN_BROKEN_EDGE"}
+
+
+def test_r2_reopt_discipline():
+    est, meas = _stats(1000, 100), _stats(9000, 900)   # q-error exactly 9
+    fired = ReoptDecision(boundary=0, estimated=est, measured=meas,
+                          threshold=3.0, q_error=9.0, triggered=True,
+                          old_next=1, new_next=2)
+    assert check_reopt_decision(fired) == []
+    calm = ReoptDecision(boundary=1, estimated=est, measured=_stats(
+        1100, 110), threshold=3.0, q_error=1.1, triggered=False,
+        old_next=2, new_next=2)
+    assert check_reopt_decision(calm) == []
+    # Forged q-error: the recorded value must be recomputable.
+    forged = dataclasses.replace(fired, q_error=1.0, triggered=False,
+                                 new_next=1)
+    assert _rules(check_reopt_decision(forged)) == {"R2_REOPT_DISCIPLINE"}
+    # Trigger flag contradicting the recorded numbers.
+    ignored = dataclasses.replace(fired, triggered=False, new_next=1)
+    assert _rules(check_reopt_decision(ignored)) == {"R2_REOPT_DISCIPLINE"}
+    # Silent re-plan: the continuation changed without a trigger.
+    silent = dataclasses.replace(calm, new_next=0)
+    assert _rules(check_reopt_decision(silent)) == {"R2_REOPT_DISCIPLINE"}
 
 
 def test_every_rule_has_a_mutation_test():

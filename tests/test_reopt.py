@@ -1,0 +1,135 @@
+"""Checkpoint re-optimization, differentially pinned.
+
+Three cells × p ∈ {1, 8}, each against the numpy oracle and against the
+reopt-off arm:
+
+  * **no divergence** — uniform catalog, histogram-backed estimates are
+    near-exact, so no checkpoint may trigger and the executed decisions
+    must be byte-identical to the reopt-off run (re-planning may only be
+    bought with evidence);
+  * **forced divergence** — ``skew_overrides`` tilts one fact FK until a
+    checkpoint's measured cardinality blows past the q-error threshold:
+    re-opt must trigger, and the *rows* must still be identical (only the
+    physical continuation may change);
+  * **empty intermediate** — a filter that keeps nothing: the q-error of
+    an empty boundary is finite by the one-row floor, checkpoints stay
+    disciplined, and both arms return the empty result.
+
+Every reopt run carries ``verify=True``, so plan-analysis rule
+``R2_REOPT_DISCIPLINE`` audits each recorded ``ReoptDecision`` inline.
+"""
+
+import numpy as np
+import pytest
+
+from repro.joins.ref import ref_equi_join, rows_as_set
+from repro.sql import Executor, RelJoinStrategy, ReorderingStrategy
+from repro.sql.datagen import generate
+from repro.sql.logical import Filter, Join, Scan
+
+
+def _plan(item_cut=150.0):
+    """3-leaf chain (a reorderable region with ≥2 checkpoints):
+    (store_sales ⋈ σ(item)) ⋈ date_dim."""
+    return Join(
+        Join(Scan("store_sales"),
+             Filter(Scan("item"), "i_item_sk", "lt", item_cut),
+             "ss_item_sk", "i_item_sk"),
+        Scan("date_dim"), "ss_sold_date_sk", "d_date_sk")
+
+
+def _oracle_rows(catalog, item_cut=150.0):
+    ss = catalog.table("store_sales").to_numpy()
+    item = catalog.table("item").to_numpy()
+    dd = catalog.table("date_dim").to_numpy()
+    item_f = {n: c[item["i_item_sk"] < item_cut] for n, c in item.items()}
+    out = ref_equi_join(ss, item_f, "ss_item_sk", "i_item_sk")
+    out = ref_equi_join(out, dd, "ss_sold_date_sk", "d_date_sk")
+    return rows_as_set(out)
+
+
+def _run(catalog, reopt, item_cut=150.0, adaptive=False):
+    ex = Executor(catalog,
+                  strategy=ReorderingStrategy(RelJoinStrategy(),
+                                              reopt=reopt),
+                  adaptive=adaptive, verify=True)
+    return ex.execute(_plan(item_cut))
+
+
+@pytest.mark.parametrize("p", [1, 8])
+def test_no_divergence_is_byte_identical(p):
+    """Uniform catalog: estimates are histogram-exact, no checkpoint
+    triggers, and the reopt arm's decisions equal the reopt-off arm's."""
+    catalog = generate(scale=0.1, p=p, seed=42)
+    off = _run(catalog, reopt=False)
+    on = _run(catalog, reopt=True)
+    assert on.reopts, "reopt run must audit every checkpoint"
+    assert on.reopt_count == 0, (
+        f"spurious trigger: {[d for d in on.reopts if d.triggered]}")
+    # Non-triggered checkpoints leave the continuation untouched: the
+    # physical execution is byte-identical to the reopt-off arm.
+    assert on.methods() == off.methods()
+    assert [(d.selection.method, d.selection.swapped_sides)
+            for d in on.decisions] == \
+        [(d.selection.method, d.selection.swapped_sides)
+         for d in off.decisions]
+    assert on.network_bytes == off.network_bytes
+    assert rows_as_set(on.table.to_numpy()) == \
+        rows_as_set(off.table.to_numpy()) == _oracle_rows(catalog)
+
+
+@pytest.mark.parametrize("p", [1, 8])
+def test_forced_divergence_triggers_and_preserves_rows(p):
+    """A Zipf-tilted ss_item_sk makes the static estimate of the first
+    join's output wrong by far more than the threshold: the checkpoint
+    must trigger, fold the measured stats, and still produce exactly the
+    oracle's rows."""
+    catalog = generate(scale=0.1, p=p, seed=7,
+                       skew_overrides={"ss_item_sk": 1.3})
+    off = _run(catalog, reopt=False)
+    on = _run(catalog, reopt=True)
+    assert on.reopt_count >= 1, (
+        f"no trigger despite divergence: {on.reopts}")
+    trig = [d for d in on.reopts if d.triggered]
+    for d in trig:
+        assert d.q_error > d.threshold
+    expected = _oracle_rows(catalog)
+    assert rows_as_set(on.table.to_numpy()) == expected
+    assert rows_as_set(off.table.to_numpy()) == expected
+    assert on.rows == off.rows
+
+
+@pytest.mark.parametrize("p", [1, 8])
+def test_empty_intermediate_stays_disciplined(p):
+    """A filter keeping nothing empties the first boundary; q-errors stay
+    finite (one-row floor), R2 still passes, and both arms agree on the
+    empty result."""
+    catalog = generate(scale=0.1, p=p, seed=42)
+    off = _run(catalog, reopt=False, item_cut=0.0)
+    on = _run(catalog, reopt=True, item_cut=0.0)
+    assert on.rows == off.rows == 0
+    assert rows_as_set(on.table.to_numpy()) == _oracle_rows(
+        catalog, item_cut=0.0) == []
+    for d in on.reopts:
+        assert np.isfinite(d.q_error)
+        assert d.triggered == (d.q_error > d.threshold)
+
+
+def test_adaptive_reopt_agrees_with_static(catalog):
+    """reopt composes with adaptive execution: measured stats are already
+    folded at every boundary, so checkpoints see q-error 1.0 against the
+    *predicted* next step and rows match the static arms."""
+    res = _run(catalog, reopt=True, adaptive=True)
+    assert rows_as_set(res.table.to_numpy()) == _oracle_rows(catalog)
+    for d in res.reopts:
+        assert d.triggered == (d.q_error > d.threshold)
+
+
+def test_reopt_decisions_record_the_continuation(catalog):
+    """Every audited checkpoint names the planned next build leaf before
+    and after; non-triggered checkpoints must not change it."""
+    res = _run(catalog, reopt=True)
+    assert res.reopts
+    for d in res.reopts:
+        if not d.triggered:
+            assert d.new_next == d.old_next
